@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: timing, result persistence, CSV output."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per call of a jit'd fn (blocks on the result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def save(name: str, payload) -> pathlib.Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / f"{name}.json"
+    path.write_text(json.dumps(payload, indent=1, default=float))
+    return path
+
+
+def row(*cells):
+    print(",".join(str(c) for c in cells), flush=True)

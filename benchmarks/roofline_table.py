@@ -1,0 +1,70 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def fmt_bytes(n):
+    for u in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{u}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def load(tag_filter=""):
+    rows = []
+    for p in sorted(RESULTS.glob("*.json")):
+        d = json.loads(p.read_text())
+        tag = p.stem.split("16x16")[-1].lstrip("_")
+        if (tag or "") != tag_filter:
+            continue
+        rows.append(d)
+    return rows
+
+
+def main(argv=None) -> int:
+    tag = argv[0] if argv else ""
+    rows = load(tag)
+    single = [r for r in rows if r["mesh"] == "16x16" and "roofline" in r]
+    multi = [r for r in rows if r["mesh"] == "2x16x16"]
+
+    print(f"## Roofline (single-pod 16x16, {len(single)} cells"
+          + (f", tag={tag})" if tag else ")"))
+    print()
+    print("| arch | shape | c (s) | m (s) | x (s) | dominant | "
+          "MODEL_FLOPS | useful/HLO | roofline frac | mem/dev arg+tmp |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(single, key=lambda r: (r["arch"], r["shape"])):
+        rf = r["roofline"]
+        mem = r.get("memory", {})
+        memstr = (fmt_bytes(mem.get("argument_bytes", 0)) + "+" +
+                  fmt_bytes(mem.get("temp_bytes", 0))
+                  if "argument_bytes" in mem else "n/a")
+        print(f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3g} "
+              f"| {rf['memory_s']:.3g} | {rf['collective_s']:.3g} "
+              f"| {rf['dominant'][:-2]} | {rf['model_flops_total']:.3g} "
+              f"| {rf['useful_flops_ratio']:.2f} "
+              f"| {rf['roofline_fraction']:.4f} | {memstr} |")
+
+    print()
+    print(f"## Multi-pod proof (2x16x16 = 512 chips, {len(multi)} cells)")
+    print()
+    print("| arch | shape | compile_s | mem/dev arg+tmp |")
+    print("|---|---|---|---|")
+    for r in sorted(multi, key=lambda r: (r["arch"], r["shape"])):
+        mem = r.get("memory", {})
+        memstr = (fmt_bytes(mem.get("argument_bytes", 0)) + "+" +
+                  fmt_bytes(mem.get("temp_bytes", 0))
+                  if "argument_bytes" in mem else "n/a")
+        print(f"| {r['arch']} | {r['shape']} | {r['compile_s']:.0f} "
+              f"| {memstr} |")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,48 @@
+"""Run every benchmark: one per paper table/figure + the roofline summary.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the MARL accuracy sweep (slowest)")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (fig10_osel, fig11_throughput, fig12_breakdown,
+                            fig13_speedup, table1_balance)
+    jobs = [
+        ("fig10_osel (OSEL cycles/memory)", fig10_osel.main),
+        ("table1_balance (workload deviation)", table1_balance.main),
+        ("fig11_throughput (accelerator model)", fig11_throughput.main),
+        ("fig12_breakdown (sparse-gen share)", fig12_breakdown.main),
+        ("fig13_speedup (sparse vs dense)", fig13_speedup.main),
+    ]
+    if not args.fast:
+        from benchmarks import fig9_accuracy
+        jobs.append(("fig9_accuracy (MARL accuracy vs sparsity)",
+                     lambda: fig9_accuracy.main([])))
+
+    failures = 0
+    for name, fn in jobs:
+        print(f"\n=== {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+            print(f"=== done in {time.time() - t0:.1f}s ===")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    print(f"\n{len(jobs) - failures}/{len(jobs)} benchmarks succeeded")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,37 @@
+"""Train a ~100M-class LM for a few hundred steps with FLGW sparsity.
+
+Uses the launcher end to end: mesh from the local devices, sharded init,
+deterministic data pipeline, fault-tolerant step runner with checkpoints.
+The default config is a deepened gemma2-family smoke model (~tens of M
+params — sized for the CPU container; on TPU pass --full).
+
+  PYTHONPATH=src python examples/lm_train.py --steps 200 --groups 4
+"""
+import argparse
+
+from repro.launch.train import train_lm
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2_2b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--groups", type=int, default=1)
+    ap.add_argument("--path", default="masked",
+                    choices=("masked", "grouped"))
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--full", action="store_true",
+                    help="full published config (TPU-scale)")
+    args = ap.parse_args(argv)
+
+    train_lm(args.arch, smoke=not args.full, steps=args.steps,
+             batch=args.batch, seq=args.seq, flgw_groups=args.groups,
+             flgw_path=args.path, ckpt_dir=args.ckpt_dir,
+             save_every=max(10, args.steps // 4),
+             log_every=max(1, args.steps // 20))
+
+
+if __name__ == "__main__":
+    main()

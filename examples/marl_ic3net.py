@@ -1,0 +1,64 @@
+"""End-to-end driver: IC3Net on Predator-Prey with FLGW sparse training.
+
+The paper's own workload (§IV-A): A cooperative predators, IC3Net policy
+with gated communication, REINFORCE+value training with RMSprop lr=1e-3,
+FLGW weight grouping at a chosen G. Prints the success-rate curve and the
+sparsity actually realised by the learned grouping matrices.
+
+  PYTHONPATH=src python examples/marl_ic3net.py --agents 4 --groups 4 \
+      --iterations 200
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core import flgw
+from repro.marl import env as env_mod
+from repro.marl import ic3net
+from repro.marl import train as train_mod
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--agents", type=int, default=4)
+    ap.add_argument("--size", type=int, default=4)
+    ap.add_argument("--groups", type=int, default=4)
+    ap.add_argument("--path", default="masked",
+                    choices=("masked", "grouped"))
+    ap.add_argument("--iterations", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--hidden", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = ic3net.IC3NetConfig(hidden=args.hidden, flgw_groups=args.groups,
+                              flgw_path=args.path)
+    ecfg = env_mod.EnvConfig(n_agents=args.agents, size=args.size,
+                             vision=1, max_steps=3 * args.size)
+    tcfg = train_mod.TrainConfig(batch=args.batch)
+    print(f"IC3Net A={args.agents} hidden={args.hidden} "
+          f"FLGW G={args.groups} ({args.path}) "
+          f"-> expected sparsity {100 * (1 - 1 / max(args.groups, 1)):.1f}%")
+
+    params, hist = train_mod.train(cfg, ecfg, tcfg, args.iterations,
+                                   seed=args.seed,
+                                   log_every=max(1, args.iterations // 10))
+    succ = np.array([h["success"] for h in hist])
+    k = max(1, len(succ) // 10)
+    print(f"success: first-{k} {succ[:k].mean():.3f}  "
+          f"last-{k} {succ[-k:].mean():.3f}")
+
+    if args.groups > 1:
+        # realised sparsity of each learned FLGW layer
+        print("learned per-layer sparsity:")
+        for name, p in params.items():
+            if isinstance(p, dict) and "ig" in p:
+                ig_idx, og_idx = flgw.grouping_indices(p["ig"], p["og"])
+                s = float(flgw.mask_sparsity(ig_idx, og_idx,
+                                             groups=args.groups))
+                print(f"  {name:<8} {100 * s:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

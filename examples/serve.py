@@ -1,0 +1,79 @@
+"""Serve a small model with batched requests: prefill + decode loop.
+
+Demonstrates the serving path the decode shape cells exercise: a batch of
+prompts is prefilled (cache-free forward -> first token), then decoded
+token by token through the ring-buffer KV/SSM caches. Reports per-phase
+throughput.
+
+  PYTHONPATH=src python examples/serve.py --arch gemma2_2b --batch 4 \
+      --prompt-len 64 --gen 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.models import transformer
+from repro.train import step as step_lib
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2_2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--groups", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    overrides = {"flgw_groups": args.groups} if args.groups > 1 else {}
+    cfg = registry.get_smoke_config(args.arch, **overrides)
+    key = jax.random.PRNGKey(0)
+    params, _ = transformer.lm_init(key, cfg)
+    b, p_len = args.batch, args.prompt_len
+    max_seq = p_len + args.gen
+
+    prompts = jax.random.randint(jax.random.fold_in(key, 1), (b, p_len),
+                                 0, cfg.vocab, jnp.int32)
+    positions = jnp.broadcast_to(jnp.arange(p_len, dtype=jnp.int32),
+                                 (b, p_len))
+
+    # --- prefill: write the prompt into the cache token-group by group ---
+    # (simple reference serving loop: replay prompt through the decode path
+    #  so windowed ring buffers stay exact; a production server would batch
+    #  chunked prefill — see launch/dryrun.py's prefill cells)
+    serve = jax.jit(step_lib.make_serve_step(cfg))
+    cache = transformer.init_cache(cfg, b, max_seq)
+    if cfg.encoder_layers:
+        cache["encoder_out"] = jnp.zeros((b, cfg.num_frames, cfg.d_model),
+                                         cfg.dtype)
+    t0 = time.time()
+    tok = prompts[:, :1]
+    for t in range(p_len):
+        nxt, cache = serve(params, cache, prompts[:, t:t + 1],
+                           positions[:, t:t + 1])
+    jax.block_until_ready(nxt)
+    t_prefill = time.time() - t0
+    print(f"prefill: {b}x{p_len} tokens in {t_prefill:.2f}s "
+          f"({b * p_len / t_prefill:.1f} tok/s)")
+
+    # --- decode ----------------------------------------------------------
+    t0 = time.time()
+    tok = nxt
+    out = [tok]
+    for i in range(args.gen - 1):
+        pos = jnp.full((b, 1), p_len + i, jnp.int32)
+        tok, cache = serve(params, cache, tok, pos)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_dec = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"decode: {b}x{args.gen} tokens in {t_dec:.2f}s "
+          f"({b * args.gen / t_dec:.1f} tok/s)")
+    print(f"sample generated ids (req 0): {gen[0, :16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

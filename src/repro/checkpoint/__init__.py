@@ -1,0 +1,5 @@
+from repro.checkpoint.store import (save_checkpoint, restore_checkpoint,
+                                    latest_step, list_steps)
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "list_steps"]

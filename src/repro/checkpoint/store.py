@@ -1,0 +1,132 @@
+"""Sharded, atomic, reshard-on-restore checkpoints.
+
+Layout (one directory per step):
+
+    <dir>/step_000123.tmp-<nonce>/   # written first
+        manifest.json                # tree structure, shapes, dtypes, hashes
+        arr_000000.npy ...           # one file per leaf
+    <dir>/step_000123/               # atomic rename when complete
+
+Fault-tolerance properties:
+
+* **Atomicity** — a crash mid-write leaves only a ``.tmp-*`` directory,
+  which restore ignores and the next save garbage-collects. The rename is
+  the commit point.
+* **Integrity** — the manifest stores a content hash per leaf; restore
+  verifies before handing the tree to the optimizer.
+* **Elastic restore** — arrays are saved *unsharded by logical leaf* and
+  re-sharded on restore to whatever mesh/sharding the caller passes, so a
+  512-chip checkpoint restores onto 256 chips (or a CPU test) unchanged.
+  (At true 1000-node scale the npy writer swaps for a parallel object-store
+  writer behind the same manifest format; the commit protocol is the same.)
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pathlib
+import shutil
+import time
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a dtype name, including ml_dtypes extras (bfloat16, fp8)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _tree_paths(tree) -> list[tuple[str, Any]]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(kp), v) for kp, v in leaves]
+
+
+def _hash(a: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()[:16]
+
+
+def save_checkpoint(ckpt_dir, step: int, tree, *, keep: int = 3) -> str:
+    """Write one checkpoint; atomic commit via rename. Returns final path."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f"step_{step:08d}.tmp-{os.getpid()}-{time.time_ns()}"
+    tmp.mkdir()
+
+    manifest = {"step": step, "leaves": []}
+    for i, (path, leaf) in enumerate(_tree_paths(tree)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"arr_{i:06d}.npy"
+        np.save(tmp / fname, arr)
+        manifest["leaves"].append({
+            "path": path, "file": fname, "shape": list(arr.shape),
+            "dtype": str(arr.dtype), "hash": _hash(arr)})
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+
+    if final.exists():                      # crash-retry of the same step
+        shutil.rmtree(final)
+    tmp.rename(final)                       # commit point
+
+    # GC: stale tmp dirs + old steps beyond ``keep``.
+    for d in ckpt_dir.glob("step_*.tmp-*"):
+        shutil.rmtree(d, ignore_errors=True)
+    steps = list_steps(ckpt_dir)
+    for s in steps[:-keep]:
+        shutil.rmtree(ckpt_dir / f"step_{s:08d}", ignore_errors=True)
+    return str(final)
+
+
+def list_steps(ckpt_dir) -> list[int]:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    out = []
+    for d in ckpt_dir.glob("step_*"):
+        if d.name.endswith(".json") or ".tmp-" in d.name:
+            continue
+        if (d / "manifest.json").exists():
+            out.append(int(d.name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(ckpt_dir, target_tree, *, step: Optional[int] = None,
+                       shardings=None, verify: bool = True):
+    """Restore into the structure of ``target_tree``.
+
+    ``shardings``: optional matching tree of NamedSharding — each leaf is
+    device_put with its sharding (elastic reshard: works for any mesh).
+    """
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    sh_flat = (jax.tree_util.tree_leaves(shardings)
+               if shardings is not None else [None] * len(flat))
+    out = []
+    for (kp, ref), sh in zip(flat, sh_flat):
+        e = by_path[jax.tree_util.keystr(kp)]
+        arr = np.load(d / e["file"])
+        if arr.dtype.kind == "V":   # np.load loses ml_dtypes names (bf16)
+            arr = arr.view(_np_dtype(e["dtype"]))
+        if verify and _hash(arr) != e["hash"]:
+            raise IOError(f"checkpoint corruption at {e['path']}")
+        if hasattr(ref, "dtype") and arr.dtype != ref.dtype:
+            arr = arr.astype(ref.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None else arr)
+    return jax.tree_util.tree_unflatten(treedef, out), step

@@ -1,0 +1,4 @@
+from repro.configs.registry import (  # noqa: F401
+    ARCH_IDS, SHAPES, all_cells, cells, get_config, get_smoke_config,
+    input_specs,
+)

@@ -1,0 +1,16 @@
+"""ic3net — the paper's own network (Singh et al., ICLR'19, as used by
+LearningGroup §IV-A): per-agent LSTM policy with a gated communication
+layer, hidden 128, trained with REINFORCE + value baseline, RMSprop lr=1e-3
+on Predator-Prey. FLGW applies to every FC and LSTM gate projection."""
+from repro.configs.registry import register, register_smoke
+from repro.marl.ic3net import IC3NetConfig
+
+
+@register("ic3net")
+def config() -> IC3NetConfig:
+    return IC3NetConfig(hidden=128, n_agents=8, flgw_groups=1)
+
+
+@register_smoke("ic3net")
+def smoke() -> IC3NetConfig:
+    return IC3NetConfig(hidden=32, n_agents=3, flgw_groups=2)

@@ -1,0 +1,9 @@
+"""Core library: the paper's contribution (FLGW pruning + OSEL + balancing)."""
+from repro.core.flgw import (  # noqa: F401
+    FLGWConfig, init_grouping, grouping_indices, mask_from_indices,
+    mask_ste, flgw_linear, mask_sparsity, selection_matrices,
+)
+from repro.core.grouped import (  # noqa: F401
+    GroupPlan, balanced_assign, make_plan, grouped_apply,
+)
+from repro.core import osel  # noqa: F401

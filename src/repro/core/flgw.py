@@ -1,0 +1,154 @@
+"""Fully Learnable Weight Grouping (FLGW) — the paper's pruning algorithm.
+
+LearningGroup (Yang et al., 2022) §III-A adopts FLGW (Wang et al., CVPR'19)
+as the pruning algorithm for MARL sparse training:
+
+  * a layer ``W ∈ R^{M×N}`` carries two learnable grouping matrices
+    ``IG ∈ R^{M×G}`` and ``OG ∈ R^{G×N}``;
+  * ``IS = row_onehot_argmax(IG)`` (M×G), ``OS = col_onehot_argmax(OG)`` (G×N);
+  * ``Mask = IS @ OS`` (M×N, binary); weights are *masked*, never removed;
+  * average sparsity is ``1 - 1/G``; the mask is re-derived every iteration
+    as IG/OG train.
+
+OSEL observation 1 (§III-B): ``Mask[i, j] == 1  ⟺  ig_idx[i] == og_idx[j]``
+where ``ig_idx = argmax(IG, axis=1)`` and ``og_idx = argmax(OG, axis=0)``.
+The mask is therefore fully determined by two small index vectors; this module
+builds everything (mask materialization, compact grouped execution, the
+straight-through training path) on top of that fact.
+
+Execution paths
+---------------
+``masked``   paper-faithful algorithm: ``y = x @ (W * Mask)`` — full FLOPs,
+             used for accuracy parity and as the numerical oracle.
+``grouped``  accelerator dataflow adapted to TPU: permute rows/cols by group
+             and run G dense (capM × capN) tiles — FLOPs ÷ G. The Pallas
+             kernel lives in ``repro.kernels.flgw_matmul``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FLGWConfig:
+    """Static configuration of one FLGW-pruned linear layer."""
+
+    groups: int = 1                 # G; G == 1 ⇒ dense (no pruning)
+    path: str = "masked"            # "dense" | "masked" | "grouped"
+    ste_temperature: float = 1.0    # softmax temperature of the STE surrogate
+    capacity_slack: float = 1.25    # grouped path: per-group row/col capacity slack
+    dtype: Any = jnp.float32
+
+    @property
+    def enabled(self) -> bool:
+        return self.groups > 1 and self.path != "dense"
+
+    @property
+    def avg_sparsity(self) -> float:
+        return 0.0 if self.groups <= 1 else 1.0 - 1.0 / self.groups
+
+
+def init_grouping(key: jax.Array, m: int, n: int, groups: int,
+                  dtype=jnp.float32) -> dict[str, jax.Array]:
+    """Random init of the grouping matrices (paper: 'initialized randomly')."""
+    kig, kog = jax.random.split(key)
+    return {
+        "ig": jax.random.normal(kig, (m, groups), dtype),
+        "og": jax.random.normal(kog, (groups, n), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Index extraction and mask construction (OSEL observation 1)
+# ---------------------------------------------------------------------------
+
+def grouping_indices(ig: jax.Array, og: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """``(ig_idx, og_idx)``: argmax of each IG row / OG column (int32).
+
+    These two vectors are the *entire* sparse metadata of the layer —
+    the TPU analogue of the sparse row memory's index lists.
+    """
+    return (jnp.argmax(ig, axis=1).astype(jnp.int32),
+            jnp.argmax(og, axis=0).astype(jnp.int32))
+
+
+def mask_from_indices(ig_idx: jax.Array, og_idx: jax.Array,
+                      dtype=jnp.float32) -> jax.Array:
+    """Materialize Mask[i,j] = (ig_idx[i] == og_idx[j]) — O(MN) compares.
+
+    This is OSEL's comparator array, vectorized: no IS @ OS matmul
+    (which would be O(M·G·N)).
+    """
+    return (ig_idx[:, None] == og_idx[None, :]).astype(dtype)
+
+
+def selection_matrices(ig: jax.Array, og: jax.Array,
+                       temperature: float = 1.0) -> tuple[jax.Array, jax.Array]:
+    """Straight-through IS/OS: hard one-hot forward, softmax-surrogate backward.
+
+    The paper trains the grouping matrices "based on the errors of the
+    corresponding selection matrix"; the STE makes argmax-binarization
+    differentiable so IG/OG receive gradients through the mask.
+    """
+    g = ig.shape[1]
+    is_soft = jax.nn.softmax(ig / temperature, axis=1)
+    is_hard = jax.nn.one_hot(jnp.argmax(ig, axis=1), g, dtype=ig.dtype)
+    is_mat = is_soft + jax.lax.stop_gradient(is_hard - is_soft)
+
+    os_soft = jax.nn.softmax(og / temperature, axis=0)
+    os_hard = jax.nn.one_hot(jnp.argmax(og, axis=0), g, dtype=og.dtype,
+                             axis=0)
+    os_mat = os_soft + jax.lax.stop_gradient(os_hard - os_soft)
+    return is_mat, os_mat
+
+
+def mask_ste(ig: jax.Array, og: jax.Array, temperature: float = 1.0) -> jax.Array:
+    """Differentiable mask: forward == mask_from_indices, backward via STE."""
+    is_mat, os_mat = selection_matrices(ig, og, temperature)
+    return is_mat @ os_mat
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def flgw_linear(x: jax.Array, w: jax.Array, ig: jax.Array, og: jax.Array,
+                cfg: FLGWConfig, *, transpose: bool = False) -> jax.Array:
+    """Apply a FLGW-masked linear layer ``y = x @ (W ⊙ Mask)``.
+
+    ``transpose=True`` computes ``y = x @ (W ⊙ Mask)^T`` using the paper's
+    weight-transpose trick: Mask^T has the same index structure with IG/OG
+    roles swapped, so no transposed metadata is stored.
+    """
+    if not cfg.enabled:
+        return x @ (w.T if transpose else w)
+    if cfg.path == "masked":
+        mask = mask_ste(ig, og, cfg.ste_temperature).astype(w.dtype)
+        wm = w * mask
+        return x @ (wm.T if transpose else wm)
+    if cfg.path == "grouped":
+        # Compact path. Gradient flows to W through the gathered tiles and to
+        # IG/OG through a (cheap) STE correction term; see grouped_apply.
+        from repro.core.grouped import grouped_apply  # local import: avoids cycle
+        return grouped_apply(x, w, ig, og, cfg, transpose=transpose)
+    raise ValueError(f"unknown FLGW path {cfg.path!r}")
+
+
+def mask_sparsity(ig_idx: jax.Array, og_idx: jax.Array,
+                  groups: int = 64) -> jax.Array:
+    """Actual (not expected) sparsity of the current mask.
+
+    ``nnz = Σ_g rows_g · cols_g`` — the mask is a union of G dense rectangles
+    (OSEL observation 2), so sparsity follows from the two group histograms.
+    """
+    total = ig_idx.shape[0] * og_idx.shape[0]
+    rows = jnp.bincount(ig_idx, length=groups)
+    cols = jnp.bincount(og_idx, length=groups)
+    nnz = jnp.sum(rows * cols)
+    return 1.0 - nnz / total

@@ -1,0 +1,27 @@
+"""Sparsity / group-number schedules over training.
+
+The paper fixes G per run (G ∈ {1,2,4,8,16,32}) and regenerates the mask
+every iteration. For framework use we also expose a refresh-period knob
+(mask refresh every k steps — the grouping matrices still train every step,
+only the compact re-planning is amortized) and a G warmup schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsitySchedule:
+    groups: int = 1
+    refresh_every: int = 1        # re-derive the mask/plan every k steps
+    warmup_steps: int = 0         # run dense for the first k steps
+
+    def groups_at(self, step: int) -> int:
+        return 1 if step < self.warmup_steps else self.groups
+
+    def refresh_at(self, step: int) -> bool:
+        return step % max(1, self.refresh_every) == 0
+
+    @property
+    def avg_sparsity(self) -> float:
+        return 0.0 if self.groups <= 1 else 1.0 - 1.0 / self.groups

@@ -1,0 +1,1 @@
+from repro.kernels.flash_attention.ops import flash_attention

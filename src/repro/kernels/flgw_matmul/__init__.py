@@ -1,0 +1,2 @@
+from repro.kernels.flgw_matmul.ops import grouped_matmul, reference  # noqa: F401
+from repro.kernels.flgw_matmul.flgw_matmul import grouped_bmm  # noqa: F401

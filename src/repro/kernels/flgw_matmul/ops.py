@@ -1,0 +1,105 @@
+"""Jit'd public wrapper around the FLGW grouped-matmul Pallas kernel.
+
+Pipeline (the TPU analogue of LearningGroup's load-allocation unit + cores):
+
+  1. gather   x  -> x_c  (G, B, capM)    activations per group
+  2. gather   W  -> W_c  (G, capM, capN) unmasked weights only (÷G bytes)
+  3. Pallas   y_c = x_c @ W_c            MXU block-diagonal matmul (÷G FLOPs)
+  4. scatter  y_c -> y   (B, N)          compact outputs to dense columns
+
+The gathers/scatter are memory-bound VPU work handled by XLA; the matmul is
+the Pallas kernel. On non-TPU backends the kernel runs in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flgw_matmul.flgw_matmul import grouped_bmm
+from repro.kernels.flgw_matmul import ref as _ref
+
+# Reference-impl mode: under plain jit, GSPMD cannot partition a pallas
+# custom call — it replicates the kernel computation on every chip (the
+# gemma2-2b dry-run measured 28x compute). On real TPUs the kernel is
+# invoked under shard_map on local blocks; for the CPU dry-run we lower the
+# mathematically identical jnp reference instead, which GSPMD shards like
+# any einsum. The launcher enables this via ``use_reference_impl()``.
+import contextlib as _contextlib
+
+_REF_MODE: list = []
+
+
+@_contextlib.contextmanager
+def use_reference_impl():
+    _REF_MODE.append(True)
+    try:
+        yield
+    finally:
+        _REF_MODE.pop()
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pick_tile(dim: int, pref: int) -> int:
+    """Largest tile ≤ pref that keeps padding small; multiples of 8."""
+    if dim >= pref:
+        return pref
+    return max(8, _round_up(dim, 8))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "impl"))
+def grouped_matmul(x: jax.Array, w: jax.Array, row_ids: jax.Array,
+                   col_ids: jax.Array, row_valid: jax.Array,
+                   col_valid: jax.Array, *,
+                   interpret: bool | None = None,
+                   impl: str = "pallas") -> jax.Array:
+    """Compact FLGW matmul. Shapes: x (B, M), w (M, N), row_ids (G, capM),
+    col_ids (G, capN); returns y (B, N). See ref.ref_grouped_matmul.
+
+    ``impl="reference"`` lowers the jnp reference instead of the Pallas
+    kernel (GSPMD-shardable; see use_reference_impl)."""
+    if impl == "reference" or _REF_MODE:
+        return _ref.ref_grouped_matmul(x, w, row_ids, col_ids, row_valid,
+                                       col_valid)
+    if interpret is None:
+        interpret = default_interpret()
+    b, m = x.shape
+    n = w.shape[1]
+    g, cap_m = row_ids.shape
+    cap_n = col_ids.shape[1]
+
+    # --- gathers -----------------------------------------------------------
+    xg = jnp.take(x, row_ids.reshape(-1), axis=1)
+    xg = xg.reshape(b, g, cap_m).transpose(1, 0, 2)          # (G, B, capM)
+    xg = jnp.where(row_valid[:, None, :], xg, 0)
+    wc = w[row_ids[:, :, None], col_ids[:, None, :]]         # (G, capM, capN)
+    wc = jnp.where(row_valid[:, :, None] & col_valid[:, None, :], wc, 0)
+
+    # --- pad to tile multiples for the kernel ------------------------------
+    bb = _pick_tile(b, 128)
+    bn = _pick_tile(cap_n, 128)
+    bk = _pick_tile(cap_m, 128)
+    bp, mp, np_ = _round_up(b, bb), _round_up(cap_m, bk), _round_up(cap_n, bn)
+    xg = jnp.pad(xg, ((0, 0), (0, bp - b), (0, mp - cap_m)))
+    wc = jnp.pad(wc, ((0, 0), (0, mp - cap_m), (0, np_ - cap_n)))
+
+    yc = grouped_bmm(xg, wc, bb=bb, bn=bn, bk=bk, interpret=interpret)
+    yc = yc[:, :b, :cap_n]                                   # (G, B, capN)
+
+    # --- scatter back to dense column order --------------------------------
+    flat_cols = jnp.where(col_valid, col_ids, n).reshape(-1)
+    yt = yc.transpose(1, 0, 2).reshape(b, -1)
+    return jnp.zeros((b, n), x.dtype).at[:, flat_cols].set(yt, mode="drop")
+
+
+def reference(x, w, row_ids, col_ids, row_valid, col_valid):
+    return _ref.ref_grouped_matmul(x, w, row_ids, col_ids, row_valid,
+                                   col_valid)

@@ -1,0 +1,2 @@
+from repro.kernels.osel_encode.ops import osel_mask, reference_mask  # noqa: F401
+from repro.kernels.osel_encode.osel_encode import encode_mask  # noqa: F401

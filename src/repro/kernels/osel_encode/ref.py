@@ -1,0 +1,32 @@
+"""Oracle for the OSEL encode kernel: the paper's *baseline* encoder.
+
+The baseline (LearningGroup §IV-C, "Baseline") generates the mask by the
+original FLGW definition — materialize the one-hot selection matrices and
+multiply: ``Mask = IS @ OS`` (an M×G×N matmul). OSEL replaces this with pure
+index comparisons; the kernel must produce bit-identical masks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_mask_matmul(ig: jax.Array, og: jax.Array) -> jax.Array:
+    """Mask via IS @ OS (the baseline's expensive path). ig: (M, G), og: (G, N)."""
+    g = ig.shape[1]
+    is_mat = jax.nn.one_hot(jnp.argmax(ig, axis=1), g, dtype=jnp.float32)
+    os_mat = jax.nn.one_hot(jnp.argmax(og, axis=0), g, dtype=jnp.float32,
+                            axis=0)
+    return (is_mat @ os_mat) > 0.5
+
+
+def ref_mask_indices(ig_idx: jax.Array, og_idx: jax.Array) -> jax.Array:
+    """Mask via index equality (what the kernel computes)."""
+    return ig_idx[:, None] == og_idx[None, :]
+
+
+def ref_workloads(ig_idx: jax.Array, og_idx: jax.Array,
+                  groups: int) -> jax.Array:
+    """Per-row workload = nnz of the row's pattern = |{j: og_idx[j]==g_i}|."""
+    hist = jnp.bincount(og_idx, length=groups)
+    return hist[ig_idx].astype(jnp.int32)

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init, and smoke tests must keep seeing 1 device.
+
+Topology: a TPU v5e pod is a 16×16 chip grid; the single-pod mesh maps it
+as (data=16, model=16) so the model axis stays inside the pod's dense ICI.
+Multi-pod adds a leading "pod" axis over the (slower) inter-pod links —
+only data-parallel gradient traffic crosses it (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_from_devices(devices=None, *, model: int = 0) -> Mesh:
+    """Elastic mesh: build (data, model) from whatever devices are alive.
+
+    Used by runtime/elastic.py after a failure shrinks the device set and by
+    single-host tests (1 device -> (1, 1) mesh). ``model`` forces the model-
+    axis width; default picks the largest power-of-two ≤ 16 that divides
+    the device count.
+    """
+    devices = jax.devices() if devices is None else devices
+    n = len(devices)
+    if model <= 0:
+        model = 1
+        while model < 16 and n % (model * 2) == 0:
+            model *= 2
+    assert n % model == 0, (n, model)
+    import numpy as np
+    arr = np.array(devices).reshape(n // model, model)
+    return Mesh(arr, ("data", "model"))

@@ -1,0 +1,110 @@
+"""IC3Net (Singh et al., '19) — the MARL network LearningGroup trains.
+
+Per agent (weights shared across agents): an observation encoder, an LSTM
+whose input is the encoded observation plus a gated mean of the other
+agents' communication vectors, a discrete-action policy head, a value head,
+and a communication gate head (the "learning when to communicate" part).
+
+Every projection is a FLGW-capable ``dense`` layer — this network is where
+the paper applies weight grouping (Fig. 4a/9): encoder, the 4H LSTM gate
+matrices, the communication projection and the output heads all carry IG/OG
+grouping matrices when ``flgw_groups > 1``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flgw import FLGWConfig
+from repro.models.layers import dense_init, proj
+
+
+@dataclasses.dataclass(frozen=True)
+class IC3NetConfig:
+    hidden: int = 128
+    n_agents: int = 3
+    n_actions: int = 5
+    obs_dim: int = 0              # filled from the env at init time
+    flgw_groups: int = 1
+    flgw_path: str = "masked"
+    comm_detach: bool = True      # IC3Net detaches comm grads across agents
+
+    @property
+    def flgw(self) -> FLGWConfig | None:
+        if self.flgw_groups <= 1:
+            return None
+        return FLGWConfig(groups=self.flgw_groups, path=self.flgw_path)
+
+
+def init(key: jax.Array, cfg: IC3NetConfig):
+    h = cfg.hidden
+    ks = jax.random.split(key, 8)
+    fl = cfg.flgw
+    params, specs = {}, {}
+    params["enc"], specs["enc"] = dense_init(
+        ks[0], cfg.obs_dim, h, flgw=fl, axes=("in", "hidden"),
+        dtype=jnp.float32)
+    # LSTM: x (h) and hidden (h) -> 4 gates
+    params["lstm_x"], specs["lstm_x"] = dense_init(
+        ks[1], h, 4 * h, flgw=fl, axes=("hidden", "gates"),
+        dtype=jnp.float32)
+    params["lstm_h"], specs["lstm_h"] = dense_init(
+        ks[2], h, 4 * h, flgw=fl, axes=("hidden", "gates"),
+        dtype=jnp.float32)
+    params["lstm_b"] = jnp.zeros((4 * h,), jnp.float32)
+    specs["lstm_b"] = (None,)
+    params["comm"], specs["comm"] = dense_init(
+        ks[3], h, h, flgw=fl, axes=("hidden", "hidden"), dtype=jnp.float32)
+    params["policy"], specs["policy"] = dense_init(
+        ks[4], h, cfg.n_actions, flgw=fl, axes=("hidden", "out"),
+        dtype=jnp.float32)
+    params["value"], specs["value"] = dense_init(
+        ks[5], h, 1, flgw=None, axes=("hidden", "out"), dtype=jnp.float32)
+    params["gate"], specs["gate"] = dense_init(
+        ks[6], h, 2, flgw=None, axes=("hidden", "out"), dtype=jnp.float32)
+    return params, specs
+
+
+def lstm_cell(params, cfg: IC3NetConfig, x, hc):
+    h, c = hc
+    fl = cfg.flgw
+    gates = proj(params["lstm_x"], x, fl) + proj(params["lstm_h"], h, fl) \
+        + params["lstm_b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, c
+
+
+def policy_step(params, cfg: IC3NetConfig, obs, hc, gate_prev):
+    """One communication+action step for all agents of one env.
+
+    obs: (A, obs_dim); hc: ((A,H),(A,H)); gate_prev: (A,) float in [0,1] —
+    the previous step's communication gate decision per agent.
+    Returns (action_logits (A,n_act), value (A,), gate_logits (A,2), new_hc).
+    """
+    a = cfg.n_agents
+    fl = cfg.flgw
+    h, c = hc
+    comm_src = jax.lax.stop_gradient(h) if cfg.comm_detach else h
+    cvec = proj(params["comm"], comm_src, fl)            # (A, H)
+    cvec = cvec * gate_prev[:, None]
+    # gated mean over the *other* agents
+    total = jnp.sum(cvec, axis=0, keepdims=True)
+    denom = max(a - 1, 1)
+    comm_in = (total - cvec) / denom                      # (A, H)
+    e = jnp.tanh(proj(params["enc"], obs, fl))
+    x = e + comm_in
+    h, c = lstm_cell(params, cfg, x, (h, c))
+    logits = proj(params["policy"], h, fl)
+    value = proj(params["value"], h)[:, 0]
+    gate_logits = proj(params["gate"], h)
+    return logits, value, gate_logits, (h, c)
+
+
+def initial_state(cfg: IC3NetConfig):
+    z = jnp.zeros((cfg.n_agents, cfg.hidden), jnp.float32)
+    return (z, z), jnp.ones((cfg.n_agents,), jnp.float32)

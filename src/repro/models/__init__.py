@@ -1,0 +1,2 @@
+from repro.models.config import ModelConfig, SlotSpec, param_count, active_param_count  # noqa: F401
+from repro.models.transformer import lm_init, lm_apply, init_cache  # noqa: F401

@@ -1,0 +1,130 @@
+"""Token-choice top-k Mixture-of-Experts with capacity-bounded dispatch.
+
+Gather-based dispatch (megablocks-style, no (T, E, C) one-hot tensors): sort
+token assignments by expert, take the first ``capacity`` per expert, run a
+batched per-expert FFN einsum, and combine with router weights. Scales to
+arctic's 128 experts. Expert weights are stacked (E, ...) so the expert axis
+shards over the mesh (EP).
+
+This mirrors the FLGW compact path in ``repro.core.grouped`` — both are
+capacity-balanced gather → block compute → scatter pipelines; the MoE router
+plays the role of the IG matrix, the expert axis the role of groups.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flgw import FLGWConfig, init_grouping
+from repro.models.layers import proj
+
+
+def moe_init(key, cfg, *, flgw: Optional[FLGWConfig] = None):
+    d = cfg.d_model
+    ff = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    std = d ** -0.5
+    params = {
+        "router": (jax.random.normal(ks[0], (d, e), jnp.float32) * std
+                   ).astype(jnp.float32),
+        "up": {"w": (jax.random.normal(ks[1], (e, d, ff), jnp.float32) * std
+                     ).astype(cfg.dtype)},
+        "gate": {"w": (jax.random.normal(ks[2], (e, d, ff), jnp.float32) * std
+                       ).astype(cfg.dtype)},
+        "down": {"w": (jax.random.normal(ks[3], (e, ff, d), jnp.float32)
+                       * ff ** -0.5).astype(cfg.dtype)},
+    }
+    specs = {
+        "router": ("embed", None),
+        "up": {"w": ("expert", "embed", "ffn")},
+        "gate": {"w": ("expert", "embed", "ffn")},
+        "down": {"w": ("expert", "ffn", "embed")},
+    }
+    if flgw is not None and flgw.groups > 1:
+        # FLGW composes per-expert: one IG/OG pair per expert FFN projection.
+        gk = jax.random.split(ks[4], 3)
+        for i, name in enumerate(("up", "gate")):
+            g = jax.vmap(lambda k: init_grouping(k, d, ff, flgw.groups))(
+                jax.random.split(gk[i], e))
+            params[name]["ig"], params[name]["og"] = g["ig"], g["og"]
+            specs[name]["ig"] = ("expert", "embed", None)
+            specs[name]["og"] = ("expert", None, "ffn")
+        g = jax.vmap(lambda k: init_grouping(k, ff, d, flgw.groups))(
+            jax.random.split(gk[2], e))
+        params["down"]["ig"], params["down"]["og"] = g["ig"], g["og"]
+        specs["down"]["ig"] = ("expert", "ffn", None)
+        specs["down"]["og"] = ("expert", None, "embed")
+    return params, specs
+
+
+def _expert_ffn(p, xe, flgw):
+    """xe: (E, C, d) -> (E, C, d), per-expert gated MLP."""
+    if flgw is not None and flgw.enabled and "ig" in p["up"]:
+        def one(pu, pg, pd, x):
+            up = proj(pu, x, flgw)
+            up = jax.nn.gelu(proj(pg, x, flgw)) * up
+            return proj(pd, up, flgw)
+        return jax.vmap(one)(p["up"], p["gate"], p["down"], xe)
+    up = jnp.einsum("ecd,edf->ecf", xe, p["up"]["w"])
+    gate = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, p["gate"]["w"]))
+    return jnp.einsum("ecf,efd->ecd", up * gate, p["down"]["w"])
+
+
+def moe(p, x, cfg, *, flgw: Optional[FLGWConfig] = None,
+        dropless: bool = False):
+    """x: (B, S, d) -> (B, S, d). Returns (out, aux_loss).
+
+    ``dropless=True`` sets per-expert capacity to the worst case (t·k) so
+    no token is ever dropped — used on the decode path, where a dropped
+    token would silently corrupt that sequence's cache/state forever.
+    Training keeps the capacity-bounded dispatch (static shapes, bounded
+    memory; drops are the standard trade).
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_e = jax.lax.top_k(probs, k)                   # (T, k)
+    gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)
+
+    # Load-balancing auxiliary loss (Switch-style).
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(gate_e[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    if dropless:
+        cap = t * k
+    else:
+        cap = int(max(1, round(t * k / e * cfg.capacity_factor)))
+        cap = min(cap, t)
+
+    # Sort (token, slot) assignments by expert; first `cap` per expert kept.
+    flat_e = gate_e.reshape(-1)                                # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_w = gate_w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # position of each sorted entry within its expert run
+    pos_in_e = jnp.arange(t * k) - jnp.searchsorted(se, se, side="left")
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se * cap + pos_in_e, e * cap)       # overflow -> drop
+
+    tok_of_slot = jnp.full((e * cap + 1,), t, jnp.int32).at[slot].set(
+        st, mode="drop")[:-1]                                  # (E*C,)
+    w_of_slot = jnp.zeros((e * cap + 1,), jnp.float32).at[slot].set(
+        sw, mode="drop")[:-1]
+
+    xe = jnp.take(xf, jnp.minimum(tok_of_slot, t - 1), axis=0)
+    xe = jnp.where((tok_of_slot < t)[:, None], xe, 0).reshape(e, cap, d)
+    ye = _expert_ffn(p, xe, flgw).reshape(e * cap, d)
+    ye = ye * w_of_slot[:, None].astype(ye.dtype)
+
+    out = (jnp.zeros((t + 1, d), x.dtype)
+           .at[tok_of_slot].add(ye, mode="drop")[:-1])
+    return out.reshape(b, s, d), aux

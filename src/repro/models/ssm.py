@@ -1,0 +1,160 @@
+"""Mamba2 (SSD — state-space duality) mixer layer.
+
+Training/prefill uses the chunked SSD algorithm: within a chunk the
+quadratic "attention-like" form runs on the MXU; across chunks a
+``lax.scan`` carries the (B, H, P, N) state — sub-quadratic in sequence
+length and the reason mamba2/jamba run the ``long_500k`` cell. Decode is a
+single O(1) state update per token.
+
+Layout: heads H = d_inner / head_dim (P = head_dim), state width N, one
+B/C group shared across heads (n_groups = 1, as mamba2-1.3b).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flgw import FLGWConfig
+from repro.models.layers import dense_init, proj, rmsnorm
+
+
+def ssm_init(key, cfg, *, flgw: Optional[FLGWConfig] = None):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * n
+    ks = jax.random.split(key, 6)
+    params, specs = {}, {}
+    # in_proj -> [z (di), xBC (di + 2N), dt (H)]
+    params["in"], specs["in"] = dense_init(
+        ks[0], d, 2 * di + 2 * n + h, flgw=flgw, axes=("embed", "ffn"),
+        dtype=cfg.dtype)
+    params["out"], specs["out"] = dense_init(
+        ks[1], di, d, flgw=flgw, axes=("ffn", "embed"), dtype=cfg.dtype)
+    params["conv_w"] = (jax.random.normal(ks[2], (cfg.conv_width, conv_ch),
+                                          jnp.float32) * 0.2).astype(cfg.dtype)
+    specs["conv_w"] = (None, "ffn")
+    params["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32))
+    specs["A_log"] = ("heads",)
+    params["D"] = jnp.ones((h,), jnp.float32)
+    specs["D"] = ("heads",)
+    params["dt_bias"] = jnp.zeros((h,), jnp.float32)
+    specs["dt_bias"] = ("heads",)
+    params["norm"] = {"scale": jnp.zeros((di,), jnp.float32)}
+    specs["norm"] = {"scale": (None,)}
+    return params, specs
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv, x: (B, S, C), w: (W, C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out
+
+
+def _ssd_chunked(xh, bm, cm, dt, a_neg, chunk: int, unroll: bool = False):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P); bm/cm: (B, S, N); dt: (B, S, H); a_neg: (H,) negative.
+    Returns y: (B, S, H, P). ``unroll=True`` replaces the cross-chunk
+    ``lax.scan`` with a Python loop (identical math) — used by the dry-run
+    cost variant, since HLO cost analysis counts a while-loop body once.
+    """
+    b, s, h, p = xh.shape
+    n = bm.shape[-1]
+    nc = s // chunk
+    assert s % chunk == 0, (s, chunk)
+
+    def to_chunks(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).transpose(
+            1, 0, *range(2, t.ndim + 1))
+
+    xc, bc, cc, dtc = map(to_chunks, (xh, bm, cm, dt))  # leading nc
+
+    def body(hstate, inp):
+        x_i, b_i, c_i, dt_i = inp           # (B,L,H,P) (B,L,N) (B,L,N) (B,L,H)
+        a_i = dt_i * a_neg                  # (B,L,H)
+        cs = jnp.cumsum(a_i, axis=1)        # inclusive
+        # off-diagonal: contribution of the incoming state
+        y_off = jnp.einsum("bln,bhpn->blhp", c_i, hstate) * \
+            jnp.exp(cs)[..., None]
+        # within-chunk quadratic form
+        cb = jnp.einsum("bln,bmn->blm", c_i, b_i)          # (B,L,L)
+        seg = cs[:, :, None, :] - cs[:, None, :, :]        # (B,L,L,H)
+        li = jnp.arange(chunk)
+        causal = (li[:, None] >= li[None, :])[None, :, :, None]
+        decay = jnp.where(causal, jnp.exp(seg), 0.0)
+        y_diag = jnp.einsum("blm,blmh,bmh,bmhp->blhp",
+                            cb, decay, dt_i, x_i.astype(jnp.float32))
+        # state update: h' = exp(sum a) h + sum_t exp(cs_end - cs_t) dt B x
+        dec_state = jnp.exp(cs[:, -1:, :] - cs)            # (B,L,H)
+        dbx = jnp.einsum("bln,blh,blhp->bhpn",
+                         b_i, dt_i * dec_state, x_i.astype(jnp.float32))
+        hstate = hstate * jnp.exp(cs[:, -1])[..., None, None] + dbx
+        return hstate, (y_off + y_diag).astype(xh.dtype)
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    if unroll:
+        hstate, ys = h0, []
+        for i in range(nc):
+            hstate, y_i = body(hstate, (xc[i], bc[i], cc[i], dtc[i]))
+            ys.append(y_i)
+        yc = jnp.stack(ys)
+    else:
+        _, yc = jax.lax.scan(body, h0, (xc, bc, cc, dtc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y
+
+
+def ssm_step(hstate, x_t, b_t, c_t, dt_t, a_neg):
+    """One decode step. hstate: (B,H,P,N); x_t: (B,H,P); b_t/c_t: (B,N);
+    dt_t: (B,H). Returns (new_state, y_t)."""
+    decay = jnp.exp(dt_t * a_neg)                           # (B,H)
+    dbx = jnp.einsum("bn,bh,bhp->bhpn", b_t, dt_t, x_t.astype(jnp.float32))
+    hstate = hstate * decay[..., None, None] + dbx
+    y = jnp.einsum("bn,bhpn->bhp", c_t, hstate)
+    return hstate, y.astype(x_t.dtype)
+
+
+def ssm(p, x, cfg, *, cache: Optional[dict] = None, chunk: int = 256,
+        flgw: Optional[FLGWConfig] = None, unroll: bool = False):
+    """Mamba2 block. x: (B, S, d). Returns (out, new_cache)."""
+    b, s, d = x.shape
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = proj(p["in"], x, flgw)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a_neg = -jnp.exp(p["A_log"])                                 # (H,)
+
+    if cache is None:
+        xbc = _causal_conv(xbc, p["conv_w"])
+        xbc = jax.nn.silu(xbc)
+        xh, bm, cm = jnp.split(xbc, [di, di + n], axis=-1)
+        xh = xh.reshape(b, s, h, hd)
+        chunk = min(chunk, s)
+        y = _ssd_chunked(xh, bm.astype(jnp.float32), cm.astype(jnp.float32),
+                         dt, a_neg, chunk, unroll=unroll)
+        new_cache = None
+    else:
+        # Decode: conv ring buffer + O(1) state update (s == 1).
+        conv_state = cache["conv"]                       # (B, W-1, conv_ch)
+        window = jnp.concatenate([conv_state, xbc], axis=1)
+        xbc_t = jnp.einsum("bwc,wc->bc", window, p["conv_w"])[:, None, :]
+        xbc_t = jax.nn.silu(xbc_t)
+        xh, bm, cm = jnp.split(xbc_t, [di, di + n], axis=-1)
+        xh = xh.reshape(b, h, hd)
+        hstate, y = ssm_step(cache["state"], xh,
+                             bm[:, 0].astype(jnp.float32),
+                             cm[:, 0].astype(jnp.float32),
+                             dt[:, 0], a_neg)
+        y = y[:, None]                                   # (B,1,H,P)
+        new_cache = {"state": hstate, "conv": window[:, 1:]}
+
+    y = y + (p["D"][:, None] * (xh if cache is None else xh[:, None])
+             .astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(b, s, di)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype))
+    return proj(p["out"], y, flgw), new_cache

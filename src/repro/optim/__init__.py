@@ -1,0 +1,10 @@
+from repro.optim.optimizers import (adamw, adamw_init, rmsprop, rmsprop_init,
+                                    global_norm, clip_by_global_norm)
+from repro.optim.compression import (topk_compress, topk_decompress,
+                                     CompressionState, compressed_allreduce)
+
+__all__ = [
+    "adamw", "adamw_init", "rmsprop", "rmsprop_init", "global_norm",
+    "clip_by_global_norm", "topk_compress", "topk_decompress",
+    "CompressionState", "compressed_allreduce",
+]

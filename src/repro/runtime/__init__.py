@@ -1,0 +1,6 @@
+from repro.runtime.fault import (PreemptionGuard, retry_transient,
+                                 StepRunner)
+from repro.runtime.elastic import remesh_state
+
+__all__ = ["PreemptionGuard", "retry_transient", "StepRunner",
+           "remesh_state"]

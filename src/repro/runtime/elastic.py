@@ -1,0 +1,37 @@
+"""Elastic remesh: rebuild the mesh from the live device set and reshard.
+
+After a node failure shrinks the fleet (512 -> 448 -> ...), training resumes
+on the survivors: ``remesh_state`` builds a new (data, model) mesh from
+whatever ``jax.devices()`` reports, recomputes every leaf's NamedSharding
+from the *logical* specs (the rules table is mesh-shape agnostic — that is
+the point of the logical indirection) and device_puts the state across.
+
+Combined with the deterministic data pipeline (batch = f(seed, step)) and
+checkpointed step counter, an elastic shrink/grow is semantically a restart:
+no optimizer state is lost, the global batch stays fixed (per-device batch
+grows), and the collective topology is rebuilt by GSPMD at the next jit.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.launch.mesh import make_mesh_from_devices
+from repro.sharding import partition
+
+
+def remesh_state(state, specs, *, devices=None, model: int = 0,
+                 old_mesh=None):
+    """Reshard ``state`` (pytree matching ``specs``) onto a fresh mesh.
+
+    Returns (new_state, new_mesh). Works host-locally in tests (1 device)
+    and on any surviving device set in production.
+    """
+    mesh = make_mesh_from_devices(devices, model=model)
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    shardings = partition.constrained_shardings(specs, abstract, mesh)
+    new_state = jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state, shardings)
+    return new_state, mesh

@@ -1,0 +1,4 @@
+from repro.sharding.partition import (  # noqa: F401
+    LOGICAL_RULES, logical_to_pspec, shardings_for, batch_pspec,
+    batch_sharding, param_shardings, activation_rules,
+)

@@ -1,0 +1,214 @@
+"""Logical-axis partitioning: spec trees -> NamedSharding.
+
+Every initializer in the framework returns ``(params, specs)`` where
+``specs`` mirrors the param tree with tuples of *logical* axis names
+(``"embed"``, ``"ffn"``, ``"heads"``, ``"vocab"``, ``"expert"``, ...).
+This module maps those logical names onto *mesh* axes
+(``"pod"``, ``"data"``, ``"model"``) via a rules table — the standard
+MaxText/Flax-style indirection that lets one model definition serve any
+mesh topology.
+
+Default rules implement the DESIGN.md §4 layout:
+
+* tensor parallelism (``model`` axis): attention heads, FFN hidden dim,
+  vocab/embedding rows, MoE experts, FLGW group-capacity tiles;
+* data parallelism (``data`` + ``pod`` axes): the batch dimension of all
+  activations;
+* everything else replicated.
+
+A name mapped to a mesh axis is silently dropped (replicated) when the
+axis does not exist in the current mesh — the same config therefore runs
+on 1-device CPU, a single pod (data, model), or multi-pod (pod, data,
+model) without edits. Rules also drop a mesh axis that was already used
+earlier in the same spec (an axis may shard at most one dim of a tensor).
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Logical name -> mesh axis (or tuple of mesh axes, or None = replicate).
+#
+# Weight layout is FSDP(data) × TP(model): every projection shards its
+# hidden dim over "model" (intra-layer parallelism — the paper's multi-core
+# split) *and* its d_model dim over "data" (fully-sharded data parallel).
+# GSPMD turns the data-dim sharding into per-layer weight all-gathers in
+# forward/backward plus reduce-scatter of grads — the ZeRO-3 schedule —
+# which is what lets arctic-480b (960 GB bf16) and jamba-398b fit 16 GB/chip
+# meshes. The "pod" axis stays pure DP: weights replicate across pods, only
+# gradients cross pod boundaries (optionally compressed, repro.optim).
+LOGICAL_RULES: dict[str, Any] = {
+    # --- weights -----------------------------------------------------------
+    "embed": "data",          # d_model dim: FSDP shard
+    "ffn": "model",           # FFN hidden dim — intra-layer parallelism
+    "heads": "model",         # attention heads
+    "kv_heads": "model",      # GQA KV heads (fewer than heads; may not divide)
+    "vocab": "model",         # embedding / unembedding rows
+    "expert": None,           # MoE expert axis: inner dims carry the sharding
+    "layers": None,           # scan axis: always replicated
+    # FLGW grouping matrices follow their weight's sharded dim via the axes
+    # recorded at dense_init time; the group dim itself is replicated.
+    "groups": None,
+    # FLGW compact tiles: the capN (output) dim carries the intra-layer
+    # parallelism — the paper's multi-core split of the compact rows.
+    "flgw_cap": "model",
+    # --- activations -------------------------------------------------------
+    "batch": ("pod", "data"),  # global batch over all data-parallel axes
+    "seq": None,               # sequence: local (no SP by default)
+    "seq_sp": "model",         # sequence parallelism opt-in (perf path)
+    "seq_kv": "model",         # decode KV caches: shard the KV sequence dim
+    # --- ic3net (tiny, replicated) ------------------------------------------
+    "in": None, "out": None, "hidden": None, "gates": None,
+}
+
+
+def _axes_of(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def logical_to_pspec(spec: Sequence[Optional[str]], mesh: Mesh,
+                     rules: Optional[Mapping[str, Any]] = None) -> P:
+    """One logical spec tuple -> PartitionSpec valid on ``mesh``."""
+    rules = LOGICAL_RULES if rules is None else rules
+    used: set[str] = set()
+    out = []
+    for name in spec:
+        axis = rules.get(name) if name is not None else None
+        if axis is None:
+            out.append(None)
+            continue
+        cand = axis if isinstance(axis, tuple) else (axis,)
+        keep = tuple(a for a in cand
+                     if a in _axes_of(mesh) and a not in used)
+        used.update(keep)
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(keep)
+    # trim trailing Nones for a tidy spec
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def shardings_for(specs, mesh: Mesh,
+                  rules: Optional[Mapping[str, Any]] = None):
+    """Spec tree -> NamedSharding tree (same structure)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, logical_to_pspec(s, mesh, rules)),
+        specs, is_leaf=_is_spec)
+
+
+def param_shardings(specs, mesh: Mesh,
+                    rules: Optional[Mapping[str, Any]] = None):
+    """Alias of shardings_for — named for call-site clarity."""
+    return shardings_for(specs, mesh, rules)
+
+
+def constrained_pspec(spec: Sequence[Optional[str]], shape,
+                      mesh: Mesh,
+                      rules: Optional[Mapping[str, Any]] = None) -> P:
+    """Shape-aware spec resolution: drop mesh axes that don't divide the dim.
+
+    GQA KV head counts (4–16), batch=1 long-context cells and 8-expert MoE
+    all hit non-divisible dims on a 16-wide axis; dropping (replicating)
+    beats uneven GSPMD padding for predictable memory accounting.
+    """
+    rules = LOGICAL_RULES if rules is None else rules
+    used: set[str] = set()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, name in enumerate(spec):
+        dim = shape[i] if i < len(shape) else 1
+        axis = rules.get(name) if name is not None else None
+        if axis is None:
+            out.append(None)
+            continue
+        cand = axis if isinstance(axis, tuple) else (axis,)
+        keep = []
+        for a in cand:
+            if a in sizes and a not in used and dim % sizes[a] == 0:
+                keep.append(a)
+                dim //= sizes[a]
+        used.update(keep)
+        out.append(None if not keep
+                   else keep[0] if len(keep) == 1 else tuple(keep))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def constrained_shardings(specs, shaped, mesh: Mesh,
+                          rules: Optional[Mapping[str, Any]] = None):
+    """(spec tree, ShapeDtypeStruct tree) -> NamedSharding tree.
+
+    The dry-run path: shapes come from ``jax.eval_shape`` so nothing is
+    allocated while resolving divisibility.
+    """
+    return jax.tree.map(
+        lambda s, a: NamedSharding(
+            mesh, constrained_pspec(s, a.shape, mesh, rules)),
+        specs, shaped, is_leaf=_is_spec)
+
+
+def batch_pspec(mesh: Mesh, ndim: int = 2,
+                rules: Optional[Mapping[str, Any]] = None) -> P:
+    """(batch, seq, ...) activation spec: batch over all data axes."""
+    spec = ["batch"] + [None] * (ndim - 1)
+    return logical_to_pspec(spec, mesh, rules)
+
+
+def batch_sharding(mesh: Mesh, ndim: int = 2,
+                   rules: Optional[Mapping[str, Any]] = None) -> NamedSharding:
+    return NamedSharding(mesh, batch_pspec(mesh, ndim, rules))
+
+
+def activation_rules(mesh: Mesh) -> dict[str, Any]:
+    """Rules dict resolved against a given mesh (for introspection/tests)."""
+    return {k: logical_to_pspec((k,), mesh) for k in LOGICAL_RULES}
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints
+#
+# Without explicit constraints GSPMD propagates the FSDP weight sharding
+# into the activations (feature-dim sharded, batch replicated!) — measured
+# on the gemma2-2b dry-run as hundreds of full-batch activation reshards.
+# The launcher opts in via ``use_constraints(mesh)``; tests and single-
+# device runs never enter the context, so the model code stays mesh-free.
+# ---------------------------------------------------------------------------
+
+import contextlib as _contextlib
+
+_CONSTRAINT_MESH: list = []
+
+
+@_contextlib.contextmanager
+def use_constraints(mesh: Mesh):
+    """Enable logical activation constraints for lowering under ``mesh``."""
+    _CONSTRAINT_MESH.append(mesh)
+    try:
+        yield
+    finally:
+        _CONSTRAINT_MESH.pop()
+
+
+def constrain(x, spec: Sequence[Optional[str]],
+              rules: Optional[Mapping[str, Any]] = None):
+    """``with_sharding_constraint(x, logical spec)`` if a constraint mesh is
+    active; no-op otherwise. Mesh axes that do not divide the dim drop."""
+    if not _CONSTRAINT_MESH:
+        return x
+    mesh = _CONSTRAINT_MESH[-1]
+    pspec = constrained_pspec(spec, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, pspec))

@@ -1,0 +1,53 @@
+"""Sequence-chunked cross-entropy.
+
+At 256k vocab the full (B, S, V) logit tensor of a train_4k cell is ~4 TB in
+f32 — it must never exist. The loss scans over sequence chunks: each chunk
+unembeds (chunk-local logits), applies the gemma softcap, reduces to a
+scalar NLL, and is rematerialized in backward (``jax.checkpoint``), so peak
+memory is one (B, chunk, V_shard) tile. The unembedding matmul shards over
+(batch=data, vocab=model); the log-sum-exp over the sharded vocab lowers to
+one small all-reduce per chunk.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import softcap
+from repro.sharding.partition import constrain
+
+
+def _pick_chunk(s: int, pref: int = 512) -> int:
+    if s <= pref:
+        return s
+    for c in range(pref, 0, -1):
+        if s % c == 0:
+            return c
+    return s
+
+
+def chunked_cross_entropy(hidden: jax.Array, embedding: jax.Array,
+                          targets: jax.Array, *, logit_softcap: float = 0.0,
+                          chunk: int = 512) -> jax.Array:
+    """Mean next-token NLL. hidden: (B, S, D); embedding: (V, D);
+    targets: (B, S) int32. Gradients flow to both hidden and embedding."""
+    b, s, d = hidden.shape
+    chunk = _pick_chunk(s, chunk)
+    nc = s // chunk
+    xc = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)     # (nc, B, C, D)
+    tc = targets.reshape(b, nc, chunk).swapaxes(0, 1)       # (nc, B, C)
+
+    def body(carry, inp):
+        x_i, t_i = inp
+        logits = jnp.einsum("bcd,vd->bcv", x_i, embedding,
+                            preferred_element_type=jnp.float32)
+        logits = constrain(logits, ("batch", None, "vocab"))
+        logits = softcap(logits, logit_softcap)
+        logz = jax.nn.logsumexp(logits, axis=-1)            # (B, C)
+        ll = jnp.take_along_axis(logits, t_i[..., None].astype(jnp.int32),
+                                 axis=-1)[..., 0]
+        return carry + jnp.sum(logz - ll), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, tc))
+    return total / (b * s)

@@ -1,0 +1,72 @@
+"""Train state: (params, optimizer state, step) as one pytree.
+
+``state_specs`` mirrors the state with logical-axis tuples so the whole
+thing — including the f32 AdamW/RMSprop moments — shards with one rules
+table. Optimizer moments inherit their parameter's spec (FSDP already
+shards every large dim, so the moments land at params_bytes × 4 / n_devices
+without a separate ZeRO pass).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.optim.optimizers import AdamWState, adamw_init, rmsprop_init
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any                      # AdamWState | rmsprop tree
+    step: jax.Array
+
+
+def init_state(key, cfg: ModelConfig, *, optimizer: str = "adamw"
+               ) -> TrainState:
+    params, _ = transformer.lm_init(key, cfg)
+    if optimizer == "adamw":
+        opt = adamw_init(params)
+    elif optimizer == "rmsprop":
+        opt = rmsprop_init(params)
+    else:
+        raise ValueError(optimizer)
+    return TrainState(params=params, opt=opt,
+                      step=jnp.zeros((), jnp.int32))
+
+
+def param_specs(cfg: ModelConfig):
+    """Logical spec tree of the params, built without any allocation.
+
+    ``lm_init`` interleaves spec construction with (traced) initialization;
+    running it under ``eval_shape`` executes the Python body once — specs
+    come out through a closure box, params stay abstract.
+    """
+    box = {}
+
+    def capture(k):
+        p, s = transformer.lm_init(k, cfg)
+        box["specs"] = s
+        return p
+
+    jax.eval_shape(capture, jax.random.PRNGKey(0))
+    return box["specs"]
+
+
+def state_specs(cfg: ModelConfig, *, optimizer: str = "adamw"):
+    """Logical spec tree with the same structure as ``init_state``'s output."""
+    pspecs = param_specs(cfg)
+    if optimizer == "adamw":
+        opt = AdamWState(mu=pspecs, nu=pspecs, count=())
+    else:
+        opt = pspecs
+    return TrainState(params=pspecs, opt=opt, step=())
+
+
+def abstract_state(cfg: ModelConfig, *, optimizer: str = "adamw"):
+    """ShapeDtypeStruct tree of the full train state (no allocation)."""
+    return jax.eval_shape(
+        lambda k: init_state(k, cfg, optimizer=optimizer),
+        jax.random.PRNGKey(0))

@@ -1,0 +1,151 @@
+"""train_step / serve_step factories — the functions the launcher jits.
+
+``make_train_step(cfg)`` returns a pure ``(state, batch) -> (state, metrics)``
+step: forward (remat-scanned blocks, chunked CE), backward, optional
+microbatch gradient accumulation (scan), global-norm clip, optimizer update.
+``make_serve_step(cfg)`` returns a single-token decode step against the KV /
+SSM caches; ``make_prefill_step(cfg)`` the full-sequence forward used by the
+prefill shape cells.
+
+Everything is shape-static: the dry-run lowers these exact functions against
+ShapeDtypeStructs, and the real launcher jits them with the same shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.optim.optimizers import adamw, clip_by_global_norm, rmsprop
+from repro.train.loss import chunked_cross_entropy
+from repro.train.state import TrainState
+
+
+def pick_q_chunk(s: int, pref: int = 512) -> int:
+    """Largest divisor of ``s`` that is ≤ pref and a multiple of 128 (or s)."""
+    if s <= pref:
+        return s
+    for c in range(pref, 127, -128):
+        if s % c == 0:
+            return c
+    for c in range(pref, 0, -1):
+        if s % c == 0:
+            return c
+    return s
+
+
+def _loss_fn(params, batch, cfg: ModelConfig, q_chunk: int, banded: bool,
+             ce_chunk: int = 512, ssd_unroll: bool = False,
+             unroll_blocks: bool = False, attn_identity: bool = False):
+    hidden, aux, _ = transformer.lm_apply(
+        params, cfg, batch["tokens"], batch["positions"],
+        patch_embeds=batch.get("patch_embeds"),
+        frames=batch.get("frames"),
+        q_chunk=q_chunk, banded=banded, return_hidden=True,
+        ssd_unroll=ssd_unroll, unroll_blocks=unroll_blocks,
+        attn_identity=attn_identity)
+    ce = chunked_cross_entropy(
+        hidden, params["embed"]["embedding"], batch["targets"],
+        logit_softcap=cfg.logit_softcap, chunk=ce_chunk)
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, *, optimizer: str = "adamw",
+                    lr: float = 3e-4, clip: float = 1.0,
+                    microbatches: int = 1, banded: bool = False,
+                    q_chunk: Optional[int] = None, ce_chunk: int = 512,
+                    ssd_unroll: bool = False, unroll_blocks: bool = False,
+                    attn_identity: bool = False):
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    ``q_chunk`` / ``ce_chunk`` / ``ssd_unroll`` exist for the dry-run cost
+    variant (scan-free lowering so HLO cost analysis sees every op); the
+    real launcher uses the memory-bounded defaults.
+    """
+
+    def train_step(state: TrainState, batch):
+        s = batch["tokens"].shape[1]
+        qc = q_chunk or pick_q_chunk(s)
+        grad_fn = jax.value_and_grad(
+            functools.partial(_loss_fn, cfg=cfg, q_chunk=qc, banded=banded,
+                              ce_chunk=ce_chunk, ssd_unroll=ssd_unroll,
+                              unroll_blocks=unroll_blocks,
+                              attn_identity=attn_identity),
+            has_aux=True)
+
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc(carry, b_i):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(state.params, b_i)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params)
+            (grads, loss), _ = jax.lax.scan(
+                acc, (zeros, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        if optimizer == "adamw":
+            params, opt = adamw(state.params, grads, state.opt, lr=lr)
+        else:
+            params, opt = rmsprop(state.params, grads, state.opt, lr=lr)
+        new_state = TrainState(params=params, opt=opt, step=state.step + 1)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, *, banded: bool = False,
+                    unroll_blocks: bool = False):
+    """Returns ``serve_step(params, cache, tokens, positions)`` —
+    one-token greedy decode against the cache (the decode shape cells)."""
+
+    def serve_step(params, cache, tokens, positions):
+        logits, _, cache = transformer.lm_apply(
+            params, cfg, tokens, positions, cache=cache, banded=banded,
+            remat=False, unroll_blocks=unroll_blocks)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, banded: bool = False,
+                      q_chunk: Optional[int] = None,
+                      ssd_unroll: bool = False,
+                      unroll_blocks: bool = False,
+                      attn_identity: bool = False):
+    """Returns ``prefill(params, tokens, positions, ...) -> last logits`` —
+    the full-sequence forward of the prefill shape cells."""
+
+    def prefill_step(params, batch):
+        s = batch["tokens"].shape[1]
+        qc = q_chunk or pick_q_chunk(s)
+        hidden, _, _ = transformer.lm_apply(
+            params, cfg, batch["tokens"], batch["positions"],
+            patch_embeds=batch.get("patch_embeds"),
+            frames=batch.get("frames"),
+            q_chunk=qc, banded=banded, remat=False, return_hidden=True,
+            ssd_unroll=ssd_unroll, unroll_blocks=unroll_blocks,
+            moe_dropless=True, attn_identity=attn_identity)
+        # Only the last position's logits are needed to start decoding.
+        from repro.models.layers import softcap, unembed
+        logits = unembed(params["embed"], hidden[:, -1:])
+        return softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+    return prefill_step

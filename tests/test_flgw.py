@@ -1,0 +1,152 @@
+"""FLGW algorithm invariants (paper §III-A / OSEL observations 1–2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import flgw
+from repro.core.osel import encode, mask_from_memory, transpose_encode
+
+
+def _rand_grouping(key, m, n, g):
+    ig = jax.random.normal(key, (m, g))
+    og = jax.random.normal(jax.random.fold_in(key, 1), (g, n))
+    return ig, og
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(2, 48), n=st.integers(2, 48), g=st.integers(1, 16),
+       seed=st.integers(0, 2**31 - 1))
+def test_mask_equals_is_os_product(m, n, g, seed):
+    """OSEL observation 1: index-equality mask == IS @ OS (paper's def)."""
+    ig, og = _rand_grouping(jax.random.PRNGKey(seed), m, n, g)
+    ig_idx, og_idx = flgw.grouping_indices(ig, og)
+    fast = flgw.mask_from_indices(ig_idx, og_idx)
+    is_mat = jax.nn.one_hot(jnp.argmax(ig, 1), g)
+    os_mat = jax.nn.one_hot(jnp.argmax(og, 0), g, axis=0)
+    slow = (is_mat @ os_mat) > 0.5
+    np.testing.assert_array_equal(np.asarray(fast) > 0.5, np.asarray(slow))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(2, 64), n=st.integers(2, 64), g=st.integers(1, 16),
+       seed=st.integers(0, 2**31 - 1))
+def test_mask_has_at_most_g_distinct_rows(m, n, g, seed):
+    """OSEL observation 2: rows of the mask are rows of OS — ≤ G distinct."""
+    ig, og = _rand_grouping(jax.random.PRNGKey(seed), m, n, g)
+    ig_idx, og_idx = flgw.grouping_indices(ig, og)
+    mask = np.asarray(flgw.mask_from_indices(ig_idx, og_idx))
+    distinct = {tuple(row) for row in mask}
+    assert len(distinct) <= g
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(4, 64), n=st.integers(4, 64),
+       g=st.sampled_from([1, 2, 4, 8, 16]), seed=st.integers(0, 2**31 - 1))
+def test_mask_sparsity_formula(m, n, g, seed):
+    """mask_sparsity (from the two histograms) == sparsity of the mask."""
+    ig, og = _rand_grouping(jax.random.PRNGKey(seed), m, n, g)
+    ig_idx, og_idx = flgw.grouping_indices(ig, og)
+    mask = np.asarray(flgw.mask_from_indices(ig_idx, og_idx))
+    got = float(flgw.mask_sparsity(ig_idx, og_idx, groups=g))
+    want = 1.0 - mask.mean()
+    assert got == pytest.approx(want, abs=1e-6)
+
+
+def test_expected_sparsity_converges_to_one_minus_inv_g():
+    """Paper: average sparsity = 1 − 1/G (random init)."""
+    key = jax.random.PRNGKey(0)
+    for g in (2, 4, 8, 16):
+        ig, og = _rand_grouping(key, 512, 512, g)
+        ig_idx, og_idx = flgw.grouping_indices(ig, og)
+        s = float(flgw.mask_sparsity(ig_idx, og_idx, groups=g))
+        assert s == pytest.approx(1.0 - 1.0 / g, abs=0.08)
+
+
+def test_masked_weights_preserved_not_removed():
+    """FLGW masks weights rather than zeroing them: W is untouched, only
+    the product sees the mask (paper: masked weights usable next iter)."""
+    key = jax.random.PRNGKey(1)
+    w = jax.random.normal(key, (8, 8))
+    ig, og = _rand_grouping(key, 8, 8, 4)
+    cfg = flgw.FLGWConfig(groups=4, path="masked")
+    x = jax.random.normal(jax.random.fold_in(key, 2), (3, 8))
+    y = flgw.flgw_linear(x, w, ig, og, cfg)
+    ig_idx, og_idx = flgw.grouping_indices(ig, og)
+    mask = flgw.mask_from_indices(ig_idx, og_idx)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ (w * mask)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ste_gradients_flow_to_grouping_matrices():
+    key = jax.random.PRNGKey(2)
+    m, n, g = 16, 12, 4
+    ig, og = _rand_grouping(key, m, n, g)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (m, n))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (5, m))
+    cfg = flgw.FLGWConfig(groups=g, path="masked")
+
+    def loss(ig, og):
+        return jnp.sum(flgw.flgw_linear(x, w, ig, og, cfg) ** 2)
+
+    dig, dog = jax.grad(loss, argnums=(0, 1))(ig, og)
+    assert float(jnp.abs(dig).sum()) > 0
+    assert float(jnp.abs(dog).sum()) > 0
+    assert not bool(jnp.any(jnp.isnan(dig)) | jnp.any(jnp.isnan(dog)))
+
+
+def test_transpose_uses_swapped_roles():
+    """y = x @ (W⊙M)^T must equal the transpose trick's output."""
+    key = jax.random.PRNGKey(3)
+    m, n, g = 12, 20, 4
+    ig, og = _rand_grouping(key, m, n, g)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (m, n))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (4, n))
+    cfg = flgw.FLGWConfig(groups=g, path="masked")
+    y = flgw.flgw_linear(x, w, ig, og, cfg, transpose=True)
+    ig_idx, og_idx = flgw.grouping_indices(ig, og)
+    mask = flgw.mask_from_indices(ig_idx, og_idx)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(x @ (w * mask).T),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# OSEL encoder
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(2, 64), n=st.integers(2, 64),
+       g=st.sampled_from([2, 4, 8, 16]), seed=st.integers(0, 2**31 - 1))
+def test_osel_encode_reconstructs_mask(m, n, g, seed):
+    ig, og = _rand_grouping(jax.random.PRNGKey(seed), m, n, g)
+    ig_idx, og_idx = flgw.grouping_indices(ig, og)
+    mem = encode(ig_idx, og_idx, g)
+    np.testing.assert_array_equal(
+        np.asarray(mask_from_memory(mem)),
+        np.asarray(flgw.mask_from_indices(ig_idx, og_idx)) > 0.5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(2, 48), n=st.integers(2, 48),
+       g=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_osel_transpose_encode_is_mask_transpose(m, n, g, seed):
+    """Backward-pass encoder: Mask^T via IG/OG role swap (paper §III-B)."""
+    ig, og = _rand_grouping(jax.random.PRNGKey(seed), m, n, g)
+    ig_idx, og_idx = flgw.grouping_indices(ig, og)
+    mem_t = transpose_encode(ig_idx, og_idx, g)
+    mask = np.asarray(flgw.mask_from_indices(ig_idx, og_idx)) > 0.5
+    np.testing.assert_array_equal(np.asarray(mask_from_memory(mem_t)),
+                                  mask.T)
+
+
+def test_osel_workloads_match_row_nnz():
+    key = jax.random.PRNGKey(7)
+    ig, og = _rand_grouping(key, 32, 48, 8)
+    ig_idx, og_idx = flgw.grouping_indices(ig, og)
+    mem = encode(ig_idx, og_idx, 8)
+    mask = np.asarray(flgw.mask_from_indices(ig_idx, og_idx))
+    per_row = mask.sum(axis=1)
+    np.testing.assert_array_equal(
+        np.asarray(mem.workloads)[np.asarray(mem.index_list)], per_row)

@@ -1,0 +1,123 @@
+"""Perf infrastructure: grad compression, schedules, roofline parsers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.schedule import SparsitySchedule
+from repro.launch import roofline
+from repro.optim.compression import (CompressionState, compression_init,
+                                     topk_compress, topk_decompress)
+
+
+# ---------------------------------------------------------------------------
+# Top-k gradient compression
+# ---------------------------------------------------------------------------
+
+def test_topk_roundtrip_keeps_largest():
+    g = jnp.array([0.1, -5.0, 0.01, 3.0, -0.2, 0.0])
+    vals, idx, k = topk_compress(g, ratio=0.34)     # k = 2
+    assert k == 2
+    dense = topk_decompress(vals, idx, g.shape)
+    np.testing.assert_allclose(np.asarray(dense),
+                               [0, -5.0, 0, 3.0, 0, 0], atol=1e-6)
+
+
+def test_error_feedback_accumulates_residual():
+    """What is not sent this step must be sent eventually (EF property):
+    over T rounds the average transmitted gradient converges to the true
+    gradient with error bounded by residual/T."""
+    grads = {"w": jnp.array([1.0, 0.5, 0.25, 0.125])}
+    state = compression_init(grads)
+    rounds = 64
+    total_sent = jnp.zeros(4)
+    for _ in range(rounds):
+        g32 = grads["w"] + state.error["w"]
+        vals, idx, _ = topk_compress(g32, 0.25)   # k=1 per round
+        sent = topk_decompress(vals, idx, (4,))
+        state = CompressionState(error={"w": g32 - sent})
+        total_sent = total_sent + sent
+    avg = np.asarray(total_sent / rounds)
+    # residual is bounded, so |avg - g| <= max|residual| / rounds
+    bound = float(np.abs(np.asarray(state.error["w"])).max()) / rounds + 0.05
+    np.testing.assert_allclose(avg, np.asarray(grads["w"]), atol=bound + 0.1)
+
+
+# ---------------------------------------------------------------------------
+# Sparsity schedule
+# ---------------------------------------------------------------------------
+
+def test_schedule_warmup_and_refresh():
+    s = SparsitySchedule(groups=8, refresh_every=4, warmup_steps=10)
+    assert s.groups_at(0) == 1 and s.groups_at(9) == 1
+    assert s.groups_at(10) == 8
+    assert s.refresh_at(0) and s.refresh_at(8) and not s.refresh_at(3)
+    assert s.avg_sparsity == pytest.approx(1 - 1 / 8)
+
+
+# ---------------------------------------------------------------------------
+# Roofline HLO parsers
+# ---------------------------------------------------------------------------
+
+_HLO = """
+HloModule test
+ENTRY main {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %p1 = bf16[64,64]{1,0} parameter(1)
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %p0), replica_groups={{0,1,2,3}}
+  %ag = f32[512,256]{1,0} all-gather(f32[128,256]{1,0} %ar), replica_groups=[2,4]<=[8]
+  %d = f32[128,64]{1,0} dot(f32[128,256]{1,0} %ar, f32[256,64]{1,0} %x)
+  %t = f32[128,64]{1,0} tanh(f32[128,64]{1,0} %d)
+  ROOT %r = f32[128]{0} reduce(f32[128,64]{1,0} %t, f32[] %c)
+}
+"""
+
+
+def test_collective_bytes_parser():
+    out = roofline.collective_bytes_from_hlo(_HLO)
+    ar = 128 * 256 * 4
+    ag = 512 * 256 * 4
+    assert out["all-reduce"] == pytest.approx(ar * 2 * 3 / 4)
+    assert out["all-gather"] == pytest.approx(ag * 3 / 4)
+    assert out["count"] == 2
+
+
+def test_fused_bytes_counts_dots_reduces_params_only():
+    got = roofline.fused_bytes_from_hlo(_HLO)
+    params = 128 * 256 * 4 + 64 * 64 * 2
+    dot = (128 * 64 + 128 * 256 + 256 * 64) * 4
+    red = (128 + 128 * 64) * 4
+    # tanh (elementwise) must NOT be counted
+    assert got == pytest.approx(params + dot + red, rel=0.01)
+
+
+def test_roofline_terms_dominant_and_fraction():
+    t = roofline.roofline_terms(
+        flops_per_chip=1.97e14, bytes_per_chip=819e9 / 2,
+        collective_bytes_per_chip=5e9, model_flops_total=1.97e14 * 128,
+        chips=256, fused_bytes_per_chip=819e9 / 4)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_fused_s"] == pytest.approx(0.25)
+    assert t["dominant"] == "compute_s"
+    assert t["roofline_fraction"] == pytest.approx(0.5)
+
+
+def test_flash_cost_scales_with_window():
+    from repro.configs import registry
+    cfg = registry.get_config("gemma2_2b")
+    full = roofline.flash_attention_cost(cfg, batch=8, seq=8192,
+                                         kind="train")
+    cfg_small_w = cfg.with_updates(pattern=tuple(
+        s.__class__(**{**s.__dict__, "window": 512}) for s in cfg.pattern))
+    small = roofline.flash_attention_cost(cfg_small_w, batch=8, seq=8192,
+                                          kind="train")
+    assert small["flops"] < full["flops"]
+
+
+def test_model_flops_moe_counts_active_only():
+    from repro.configs import registry
+    mix = registry.get_config("mixtral_8x22b")
+    total = roofline.model_flops(mix, 1000, kind="train")
+    from repro.models.config import active_param_count, param_count
+    assert active_param_count(mix) < param_count(mix) / 2
+    assert total == pytest.approx(6 * active_param_count(mix) * 1000)

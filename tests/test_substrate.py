@@ -1,0 +1,279 @@
+"""Substrate tests: sharding rules, checkpoint, data pipeline, optimizers,
+loss, load balancing (Table I), runtime fault handling."""
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.checkpoint import (latest_step, restore_checkpoint,
+                              save_checkpoint)
+from repro.core import flgw
+from repro.core.load_balance import (balanced_allocate, deviation,
+                                     row_allocate, threshold_allocate)
+from repro.data.pipeline import SyntheticTokens, make_batch_iterator
+from repro.optim.optimizers import (adamw, adamw_init, clip_by_global_norm,
+                                    global_norm, rmsprop, rmsprop_init)
+from repro.runtime.fault import retry_transient
+from repro.sharding import partition
+from repro.train.loss import chunked_cross_entropy
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+def _mesh2():
+    import numpy as np
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(devs, ("data", "model"))
+
+
+def test_constrained_pspec_drops_nondivisible_axes():
+    mesh = _mesh2()
+    # 1-wide axes always divide: spec survives
+    assert partition.constrained_pspec(("batch", None), (8, 4), mesh) == \
+        P("data")
+    # unknown names replicate
+    assert partition.constrained_pspec(("nope",), (8,), mesh) == P()
+
+
+def test_constrained_pspec_divisibility_on_fake_mesh():
+    """Resolution logic against a virtual 16-wide axis (no devices needed:
+    we only exercise the pure function via a Mesh of shape attributes)."""
+    class FakeMesh:
+        axis_names = ("data", "model")
+
+        class devices:
+            shape = (16, 16)
+
+    fm = FakeMesh()
+    # kv_heads = 8 on a 16-wide model axis -> dropped
+    assert partition.constrained_pspec(
+        ("layers", "batch", "seq_kv", "kv_heads"), (4, 128, 4096, 8),
+        fm) == P(None, "data", "model")
+    # batch=1 cannot shard
+    assert partition.constrained_pspec(("batch",), (1,), fm) == P()
+    # two-axis batch: (pod, data) with pod missing -> data only
+    assert partition.constrained_pspec(("batch",), (256,), fm) == P("data")
+
+
+def test_logical_rules_one_axis_per_tensor():
+    class FakeMesh:
+        axis_names = ("data", "model")
+
+        class devices:
+            shape = (16, 16)
+
+    # "ffn" then "heads" both want model: second one must drop
+    got = partition.constrained_pspec(("ffn", "heads"), (256, 256),
+                                      FakeMesh())
+    assert got == P("model")
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16),
+                  "d": jnp.zeros((), jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, 7, t)
+    got, step = restore_checkpoint(tmp_path, t)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, jnp.float32),
+                                      np.asarray(b, jnp.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_keeps_latest_and_gc(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(tmp_path, s, t, keep=2)
+    assert latest_step(tmp_path) == 5
+    from repro.checkpoint import list_steps
+    assert list_steps(tmp_path) == [4, 5]
+
+
+def test_checkpoint_ignores_partial_tmp(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, 1, t)
+    # simulate a crash mid-write: stale tmp dir with garbage
+    bad = pathlib.Path(tmp_path) / "step_00000002.tmp-999-1"
+    bad.mkdir()
+    (bad / "arr_000000.npy").write_bytes(b"partial")
+    assert latest_step(tmp_path) == 1
+    got, step = restore_checkpoint(tmp_path, t)
+    assert step == 1
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    t = _tree()
+    path = save_checkpoint(tmp_path, 3, t)
+    # flip bytes in one leaf
+    f = sorted(pathlib.Path(path).glob("arr_*.npy"))[0]
+    raw = bytearray(f.read_bytes())
+    raw[-1] ^= 0xFF
+    f.write_bytes(bytes(raw))
+    with pytest.raises(IOError):
+        restore_checkpoint(tmp_path, t)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_per_step():
+    ds = SyntheticTokens(vocab=1000, batch=4, seq=16, seed=3)
+    a = ds.batch_at(5)
+    b = ds.batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = ds.batch_at(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_targets_are_shifted_tokens():
+    ds = SyntheticTokens(vocab=97, batch=2, seq=8, seed=0)
+    b = ds.batch_at(0)
+    assert b["tokens"].shape == (2, 8)
+    assert (b["tokens"] < 97).all() and (b["tokens"] >= 0).all()
+
+
+def test_data_iterator_resumes_at_step():
+    ds = SyntheticTokens(vocab=50, batch=2, seq=4, seed=1)
+    it = make_batch_iterator(ds, start_step=3)
+    first = next(it)
+    np.testing.assert_array_equal(first["tokens"], ds.batch_at(3)["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# Optimizers / loss
+# ---------------------------------------------------------------------------
+
+def test_rmsprop_and_adamw_minimize_quadratic():
+    target = jnp.array([1.0, -2.0, 3.0])
+
+    def loss(p):
+        return jnp.sum((p["x"] - target) ** 2)
+
+    for name, init, step in (
+            ("rmsprop", rmsprop_init,
+             lambda p, g, s: rmsprop(p, g, s, lr=0.05)),
+            ("adamw", adamw_init,
+             lambda p, g, s: adamw(p, g, s, lr=0.05, weight_decay=0.0))):
+        params = {"x": jnp.zeros(3)}
+        state = init(params)
+        for _ in range(300):
+            g = jax.grad(loss)(params)
+            params, state = step(params, g, state)
+        assert float(loss(params)) < 1e-2, name
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_chunked_ce_matches_full_ce():
+    key = jax.random.PRNGKey(0)
+    b, s, d, v = 2, 16, 8, 32
+    x = jax.random.normal(key, (b, s, d))
+    emb = jax.random.normal(jax.random.fold_in(key, 1), (v, d))
+    tgt = jax.random.randint(jax.random.fold_in(key, 2), (b, s), 0, v)
+    got = chunked_cross_entropy(x, emb, tgt, chunk=4)
+    logits = x @ emb.T
+    logz = jax.nn.logsumexp(logits, -1)
+    ll = jnp.take_along_axis(logits, tgt[..., None], -1)[..., 0]
+    want = jnp.mean(logz - ll)
+    assert float(got) == pytest.approx(float(want), rel=1e-5)
+
+
+def test_chunked_ce_gradients_flow_to_embedding():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (2, 8, 4))
+    emb = jax.random.normal(jax.random.fold_in(key, 1), (16, 4))
+    tgt = jnp.zeros((2, 8), jnp.int32)
+    g = jax.grad(lambda e: chunked_cross_entropy(x, e, tgt, chunk=4))(emb)
+    assert float(jnp.abs(g).sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# Load balancing (Table I)
+# ---------------------------------------------------------------------------
+
+def test_row_allocation_beats_threshold_on_flgw_masks():
+    """Paper Table I: row-based deviation < threshold-based, for G=2..16."""
+    key = jax.random.PRNGKey(0)
+    wins = 0
+    cases = 0
+    for g in (2, 4, 8, 16):
+        for seed in range(5):
+            k = jax.random.fold_in(key, g * 100 + seed)
+            ig = jax.random.normal(k, (128, g))
+            og = jax.random.normal(jax.random.fold_in(k, 1), (g, 512))
+            ig_idx, og_idx = flgw.grouping_indices(ig, og)
+            mask = np.asarray(flgw.mask_from_indices(ig_idx, og_idx))
+            d_thr = deviation(threshold_allocate(mask, 3))
+            d_row = deviation(row_allocate(mask, 3))
+            cases += 1
+            wins += d_row <= d_thr
+    assert wins / cases >= 0.6   # row-based wins on average (paper: always)
+
+
+def test_balanced_allocation_deviation_near_zero():
+    """Our TPU scheme: capacity-balanced rows ⇒ ~0 deviation by design."""
+    key = jax.random.PRNGKey(1)
+    from repro.core.grouped import make_plan
+    ig = jax.random.normal(key, (128, 4))
+    og = jax.random.normal(jax.random.fold_in(key, 1), (4, 512))
+    plan = make_plan(ig, og)
+    per_core = balanced_allocate(np.asarray(plan.row_group),
+                                 np.asarray(plan.col_group), 4, 4)
+    ideal = per_core.sum() / 4
+    assert deviation(per_core) <= 0.05 * ideal
+
+
+# ---------------------------------------------------------------------------
+# Runtime
+# ---------------------------------------------------------------------------
+
+def test_retry_transient_retries_then_succeeds():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("DEADLINE_EXCEEDED: collective timed out")
+        return 42
+
+    assert retry_transient(flaky, retries=5, backoff_s=0.0) == 42
+    assert calls["n"] == 3
+
+
+def test_retry_transient_raises_on_permanent():
+    def broken():
+        raise ValueError("shape mismatch")
+
+    with pytest.raises(ValueError):
+        retry_transient(broken, retries=3, backoff_s=0.0)
+
+
+def test_elastic_remesh_roundtrip():
+    from repro.runtime.elastic import remesh_state
+    state = {"w": jnp.arange(8.0).reshape(2, 4)}
+    specs = {"w": ("embed", "ffn")}
+    new_state, mesh = remesh_state(state, specs)
+    np.testing.assert_array_equal(np.asarray(new_state["w"]),
+                                  np.asarray(state["w"]))
+    assert set(mesh.axis_names) == {"data", "model"}
