@@ -1,9 +1,11 @@
 """Fig. 9 / Fig. 4a — MARL training accuracy vs sparsity (group number).
 
-Trains IC3Net on Predator-Prey with FLGW at G ∈ {1, 2, 4, 8} and reports
-the average success rate, reproducing the paper's accuracy-vs-sparsity
-curve shape: accuracy holds near the dense baseline through G=4 (75 %
-sparsity) and degrades gracefully beyond.
+Trains IC3Net with FLGW at G ∈ {1, 2, 4, 8} and reports the average
+success rate, reproducing the paper's accuracy-vs-sparsity curve shape:
+accuracy holds near the dense baseline through G=4 (75 % sparsity) and
+degrades gracefully beyond. Any environment registered in
+``repro.marl.envs`` can be swept (``--envs predator_prey traffic_junction
+spread``); the paper's own condition is Predator-Prey.
 
 The paper runs 2000 iterations x batch 32 on an FPGA; the CPU-budget
 default here is --iters 800 x batch 16 on a smaller grid, which reproduces
@@ -17,7 +19,7 @@ import argparse
 import numpy as np
 
 from benchmarks.common import row, save
-from repro.marl import env as env_mod
+from repro.marl import envs as envs_mod
 from repro.marl import ic3net
 from repro.marl import train as train_mod
 
@@ -29,28 +31,34 @@ def main(argv=None) -> dict:
     ap.add_argument("--size", type=int, default=4)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--groups", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--envs", nargs="+", default=["predator_prey"],
+                    choices=envs_mod.names())
     args = ap.parse_args(argv)
 
-    ecfg = env_mod.EnvConfig(n_agents=args.agents, size=args.size,
-                             vision=1, max_steps=3 * args.size)
     tcfg = train_mod.TrainConfig(batch=args.batch)
     out = {"iters": args.iters, "agents": args.agents, "cells": []}
-    row(f"# fig9_accuracy: IC3Net Predator-Prey, A={args.agents}, "
-        f"{args.iters} iters")
-    row("G", "sparsity_%", "success_final_%", "success_mean_%")
-    for g in args.groups:
-        cfg = ic3net.IC3NetConfig(hidden=128, flgw_groups=g,
-                                  flgw_path="masked")
-        _, hist = train_mod.train(cfg, ecfg, tcfg, iterations=args.iters,
-                                  seed=0)
-        succ = np.array([h["success"] for h in hist])
-        tail = float(succ[-max(1, args.iters // 10):].mean() * 100)
-        mean = float(succ.mean() * 100)
-        row(g, f"{100 * (1 - 1 / max(g, 1)):.1f}", f"{tail:.1f}",
-            f"{mean:.1f}")
-        out["cells"].append({"G": g, "sparsity": 1 - 1 / max(g, 1),
-                             "final_success_pct": tail,
-                             "mean_success_pct": mean})
+    row(f"# fig9_accuracy: IC3Net, A={args.agents}, {args.iters} iters, "
+        f"envs={args.envs}")
+    row("env", "G", "sparsity_%", "success_final_%", "success_mean_%")
+    for env_name in args.envs:
+        env, ecfg = envs_mod.make(
+            env_name, n_agents=args.agents, size=args.size,
+            max_steps=3 * args.size)
+        for g in args.groups:
+            cfg = ic3net.IC3NetConfig(hidden=128, flgw_groups=g,
+                                      flgw_path="masked")
+            _, hist = train_mod.train(cfg, ecfg, tcfg,
+                                      iterations=args.iters, seed=0,
+                                      env=env)
+            succ = np.array([h["success"] for h in hist])
+            tail = float(succ[-max(1, args.iters // 10):].mean() * 100)
+            mean = float(succ.mean() * 100)
+            row(env_name, g, f"{100 * (1 - 1 / max(g, 1)):.1f}",
+                f"{tail:.1f}", f"{mean:.1f}")
+            out["cells"].append({"env": env_name, "G": g,
+                                 "sparsity": 1 - 1 / max(g, 1),
+                                 "final_success_pct": tail,
+                                 "mean_success_pct": mean})
     row("# paper: accuracy ~= dense through G=4 (75% sparsity); "
         "G=8 holds with >=8 agents")
     save("fig9_accuracy", out)

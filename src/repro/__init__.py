@@ -1,0 +1,1 @@
+"""LearningGroup reproduction — FLGW sparse training on JAX/Pallas."""

@@ -19,6 +19,11 @@ class SparsitySchedule:
     def groups_at(self, step: int) -> int:
         return 1 if step < self.warmup_steps else self.groups
 
+    def sparse_at(self, step):
+        """Is the mask on at ``step``? Works on traced int32 (used inside
+        ``lax.scan`` loops, where ``groups_at`` can't branch)."""
+        return step >= self.warmup_steps
+
     def refresh_at(self, step: int) -> bool:
         return step % max(1, self.refresh_every) == 0
 

@@ -1,3 +1,16 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+from jax.experimental.pallas import tpu as _pltpu
+
+
+def tpu_compiler_params(**kwargs):
+    """Mosaic compiler params across JAX versions.
+
+    jax >= 0.5 exposes ``pltpu.CompilerParams``; 0.4.x calls the same class
+    ``TPUCompilerParams``. All kernels route through this helper so they run
+    on either.
+    """
+    cls = getattr(_pltpu, "CompilerParams", None) \
+        or getattr(_pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _bmm_kernel(xg_ref, wc_ref, out_ref, acc_ref, *, k_steps: int):
     """One (g, b-tile, n-tile, k-tile) grid step."""
@@ -71,7 +73,7 @@ def grouped_bmm(xg: jax.Array, wc: jax.Array, *, bb: int = 128,
         out_specs=pl.BlockSpec((1, bb, bn), lambda g, i, j, k: (g, i, j)),
         out_shape=jax.ShapeDtypeStruct((g, b, n), xg.dtype),
         scratch_shapes=[pltpu.VMEM((bb, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"),
         ),

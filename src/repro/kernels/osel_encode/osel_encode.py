@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _encode_kernel(ig_ref, og_ref, mask_ref):
     ig = ig_ref[...]          # (bm, 1)
@@ -47,7 +49,7 @@ def encode_mask(ig_idx: jax.Array, og_idx: jax.Array, *, bm: int = 256,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.uint8),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

@@ -1,0 +1,1 @@
+"""Launch-scale tooling: meshes, dry-runs, roofline models."""

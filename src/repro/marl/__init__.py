@@ -1,0 +1,1 @@
+"""MARL workload: IC3Net, the env registry, the on-device trainer."""

@@ -1,88 +1,20 @@
-"""Predator-Prey — pure-JAX cooperative gridworld (paper §IV-A).
+"""Back-compat shim — Predator-Prey lives in ``repro.marl.envs``.
 
-``A`` cooperative predators search a ``size × size`` grid for one stationary
-prey. Agents observe their own position (one-hot) and, within ``vision``
-Chebyshev distance, the prey's relative offset. An agent standing on the
-prey is "arrived"; the episode succeeds when every predator has arrived.
-Reward shaping follows IC3Net's cooperative mode: a small time penalty while
-searching, a positive reward on the prey cell.
-
-Everything is functional and vmap/scan friendly: ``reset`` and ``step`` are
-pure, states are pytrees of arrays, so thousands of environments batch on
-device next to the learner — the host never emulates physics step-by-step.
+The single-environment module grew into the ``repro.marl.envs`` subpackage
+(registry + Predator-Prey, Traffic Junction, Spread). Importing
+``repro.marl.env`` keeps resolving to the Predator-Prey functions so seed
+code and tests keep working; new code should go through
+``repro.marl.envs.get(name)``.
 """
-from __future__ import annotations
-
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-
-
-class EnvConfig(NamedTuple):
-    n_agents: int = 3
-    size: int = 5
-    vision: int = 1
-    max_steps: int = 20
-    step_penalty: float = -0.05
-    prey_reward: float = 0.5
-
-
-class EnvState(NamedTuple):
-    pos: jax.Array        # (A, 2) int32 agent positions
-    prey: jax.Array       # (2,) int32
-    arrived: jax.Array    # (A,) bool — has each agent reached the prey
-    t: jax.Array          # () int32
-
-
-# actions: 0=stay, 1=up, 2=down, 3=left, 4=right
-_MOVES = jnp.array([[0, 0], [-1, 0], [1, 0], [0, -1], [0, 1]], jnp.int32)
-N_ACTIONS = 5
-
-
-def obs_dim(cfg: EnvConfig) -> int:
-    # own position one-hot (2·size) + prey offset one-hot ((2v+1)^2) + seen flag
-    return 2 * cfg.size + (2 * cfg.vision + 1) ** 2 + 1
-
-
-def reset(key: jax.Array, cfg: EnvConfig) -> EnvState:
-    kp, ka = jax.random.split(key)
-    prey = jax.random.randint(kp, (2,), 0, cfg.size, jnp.int32)
-    pos = jax.random.randint(ka, (cfg.n_agents, 2), 0, cfg.size, jnp.int32)
-    return EnvState(pos=pos, prey=prey,
-                    arrived=jnp.zeros((cfg.n_agents,), bool),
-                    t=jnp.zeros((), jnp.int32))
-
-
-def observe(state: EnvState, cfg: EnvConfig) -> jax.Array:
-    """(A, obs_dim) float32 observations."""
-    a = cfg.n_agents
-    row = jax.nn.one_hot(state.pos[:, 0], cfg.size)
-    col = jax.nn.one_hot(state.pos[:, 1], cfg.size)
-    off = state.prey[None, :] - state.pos                    # (A, 2)
-    seen = jnp.all(jnp.abs(off) <= cfg.vision, axis=1)       # (A,)
-    v = 2 * cfg.vision + 1
-    oidx = (off[:, 0] + cfg.vision) * v + (off[:, 1] + cfg.vision)
-    prey_oh = jax.nn.one_hot(jnp.clip(oidx, 0, v * v - 1), v * v)
-    prey_oh = prey_oh * seen[:, None]
-    return jnp.concatenate(
-        [row, col, prey_oh, seen[:, None].astype(jnp.float32)], axis=1)
-
-
-def step(state: EnvState, actions: jax.Array,
-         cfg: EnvConfig) -> tuple[EnvState, jax.Array, jax.Array]:
-    """actions: (A,) int32. Returns (new_state, rewards (A,), done ())."""
-    # Arrived agents stay on the prey (IC3Net freezes them).
-    moves = jnp.where(state.arrived[:, None], 0, _MOVES[actions])
-    pos = jnp.clip(state.pos + moves, 0, cfg.size - 1)
-    on_prey = jnp.all(pos == state.prey[None, :], axis=1)
-    arrived = state.arrived | on_prey
-    rewards = jnp.where(arrived, cfg.prey_reward, cfg.step_penalty)
-    t = state.t + 1
-    done = jnp.all(arrived) | (t >= cfg.max_steps)
-    return EnvState(pos=pos, prey=state.prey, arrived=arrived, t=t), \
-        rewards, done
-
-
-def success(state: EnvState) -> jax.Array:
-    return jnp.all(state.arrived)
+from repro.marl.envs.predator_prey import (  # noqa: F401
+    _MOVES,
+    N_ACTIONS,
+    EnvConfig,
+    EnvState,
+    n_actions,
+    obs_dim,
+    observe,
+    reset,
+    step,
+    success,
+)

@@ -1,0 +1,80 @@
+"""Multi-scenario MARL environment registry.
+
+Every environment is a module of pure functions over NamedTuple pytrees —
+``reset``/``step``/``observe``/``success`` plus the static helpers
+``obs_dim``/``n_actions`` — bundled into an :class:`Env` record and
+registered under a string key. The training engine (``repro.marl.train``)
+is written against this protocol only, so a new scenario is one module plus
+one ``register`` call and every benchmark/example sweeps it for free.
+
+All bundled environments are vmap/scan friendly: states are pytrees of
+fixed-shape arrays, ``reset``/``step`` are pure, and nothing branches on
+traced values — thousands of envs batch on device next to the learner.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.marl.envs import predator_prey, spread, traffic_junction
+
+
+@dataclasses.dataclass(frozen=True)
+class Env:
+    """One registered environment: its config type plus pure functions.
+
+    Frozen (hashable) so an ``Env`` can ride through ``jax.jit`` as a
+    static argument.
+    """
+
+    name: str
+    config_cls: type
+    reset: Callable[..., Any]          # (key, cfg) -> state
+    step: Callable[..., Any]           # (state, actions, cfg) -> (state, rew, done)
+    observe: Callable[..., Any]        # (state, cfg) -> (A, obs_dim) obs
+    success: Callable[..., Any]        # (state,) -> () bool
+    obs_dim: Callable[..., int]        # (cfg,) -> int
+    n_actions: Callable[..., int]      # (cfg,) -> int
+
+    def default_config(self, **overrides):
+        return self.config_cls(**overrides)
+
+
+_REGISTRY: dict[str, Env] = {}
+
+
+def register(env: Env) -> Env:
+    if env.name in _REGISTRY:
+        raise ValueError(f"environment {env.name!r} already registered")
+    _REGISTRY[env.name] = env
+    return env
+
+
+def get(name: str) -> Env:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown environment {name!r}; registered: {names()}") from None
+
+
+def names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def make(name: str, **overrides) -> tuple[Env, Any]:
+    """Look up an environment and build its config in one call."""
+    env = get(name)
+    return env, env.default_config(**overrides)
+
+
+def _register_module(name: str, mod) -> Env:
+    return register(Env(
+        name=name, config_cls=mod.EnvConfig, reset=mod.reset, step=mod.step,
+        observe=mod.observe, success=mod.success, obs_dim=mod.obs_dim,
+        n_actions=mod.n_actions))
+
+
+PREDATOR_PREY = _register_module("predator_prey", predator_prey)
+TRAFFIC_JUNCTION = _register_module("traffic_junction", traffic_junction)
+SPREAD = _register_module("spread", spread)

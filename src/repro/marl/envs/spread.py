@@ -1,0 +1,102 @@
+"""Cooperative navigation ("spread") — a gridworld take on MPE simple-spread.
+
+``A`` agents must cover ``A`` landmarks on a ``size × size`` grid. All
+agents share a cooperative reward: the mean (over landmarks) distance to
+the nearest agent, negated — improving coverage anywhere pays everyone —
+plus a per-agent bonus for standing on a landmark. The episode succeeds
+when every landmark is occupied by at least one agent, which requires the
+team to *spread out* rather than converge on the closest landmark.
+
+Like the other registered environments this is pure and fixed-shape:
+``reset``/``step`` are jit/vmap-friendly and the state is a pytree of
+arrays, so batched rollouts run fully on device.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EnvConfig(NamedTuple):
+    n_agents: int = 3
+    size: int = 5
+    vision: int = 1                  # unused; kept for protocol symmetry
+    max_steps: int = 20
+    occupy_reward: float = 0.25
+    cover_bonus: float = 0.5
+
+
+class EnvState(NamedTuple):
+    pos: jax.Array        # (A, 2) int32 agent positions
+    landmarks: jax.Array  # (A, 2) int32 landmark positions
+    t: jax.Array          # () int32
+
+
+# actions: 0=stay, 1=up, 2=down, 3=left, 4=right
+_MOVES = jnp.array([[0, 0], [-1, 0], [1, 0], [0, -1], [0, 1]], jnp.int32)
+N_ACTIONS = 5
+
+
+def obs_dim(cfg: EnvConfig) -> int:
+    # own position one-hot (2·size) + per-landmark offset (2·A, normalized)
+    # + per-landmark covered flag (A)
+    return 2 * cfg.size + 3 * cfg.n_agents
+
+
+def n_actions(cfg: EnvConfig) -> int:
+    return N_ACTIONS
+
+
+def reset(key: jax.Array, cfg: EnvConfig) -> EnvState:
+    ka, kl = jax.random.split(key)
+    pos = jax.random.randint(ka, (cfg.n_agents, 2), 0, cfg.size, jnp.int32)
+    landmarks = jax.random.randint(kl, (cfg.n_agents, 2), 0, cfg.size,
+                                   jnp.int32)
+    return EnvState(pos=pos, landmarks=landmarks,
+                    t=jnp.zeros((), jnp.int32))
+
+
+def _coverage(state: EnvState) -> jax.Array:
+    """(A,) bool — is each landmark occupied by some agent."""
+    same = jnp.all(state.pos[:, None, :] == state.landmarks[None, :, :],
+                   axis=-1)                                  # (agent, lm)
+    return jnp.any(same, axis=0)
+
+
+def observe(state: EnvState, cfg: EnvConfig) -> jax.Array:
+    """(A, obs_dim) float32 observations."""
+    row = jax.nn.one_hot(state.pos[:, 0], cfg.size)
+    col = jax.nn.one_hot(state.pos[:, 1], cfg.size)
+    off = state.landmarks[None, :, :] - state.pos[:, None, :]  # (A, L, 2)
+    off = off.astype(jnp.float32) / max(cfg.size - 1, 1)
+    covered = _coverage(state).astype(jnp.float32)             # (L,)
+    a = cfg.n_agents
+    return jnp.concatenate(
+        [row, col, off.reshape(a, -1),
+         jnp.broadcast_to(covered[None, :], (a, a))], axis=1)
+
+
+def step(state: EnvState, actions: jax.Array,
+         cfg: EnvConfig) -> tuple[EnvState, jax.Array, jax.Array]:
+    """actions: (A,) int32. Returns (new_state, rewards (A,), done ())."""
+    pos = jnp.clip(state.pos + _MOVES[actions], 0, cfg.size - 1)
+    nstate = EnvState(pos=pos, landmarks=state.landmarks, t=state.t + 1)
+    # shared shaping: mean over landmarks of the distance to the nearest agent
+    dist = jnp.sum(jnp.abs(pos[:, None, :] - state.landmarks[None, :, :]),
+                   axis=-1)                                   # (agent, lm)
+    nearest = jnp.min(dist, axis=0).astype(jnp.float32)       # (lm,)
+    shared = -jnp.mean(nearest) / max(cfg.size, 1)
+    covered = _coverage(nstate)
+    all_covered = jnp.all(covered)
+    occupy = jnp.any(jnp.all(pos[:, None, :] == state.landmarks[None, :, :],
+                             axis=-1), axis=1)                # (agent,)
+    rewards = shared + cfg.occupy_reward * occupy.astype(jnp.float32) \
+        + cfg.cover_bonus * all_covered.astype(jnp.float32)
+    done = all_covered | (nstate.t >= cfg.max_steps)
+    return nstate, rewards, done
+
+
+def success(state: EnvState) -> jax.Array:
+    return jnp.all(_coverage(state))

@@ -1,0 +1,138 @@
+"""Traffic Junction — pure-JAX port of IC3Net's second benchmark.
+
+Two one-way roads cross at the centre of a ``size × size`` grid: route 0
+drives the middle row left→right, route 1 the middle column top→bottom.
+Each of the ``A`` cars is assigned a route and a distinct entry step at
+reset (staggered entries, so collisions are a consequence of policy — not
+of spawning). Actions are binary: 0 = brake (hold position), 1 = gas
+(advance one cell along the route). Two cars on the same cell collide;
+each car also pays a time penalty proportional to how long it has been on
+the road, so the learned trade-off is "brake near the junction but do not
+dawdle" — the coordination problem communication is supposed to solve.
+
+An episode *succeeds* iff no collision happened before every car cleared
+the grid (IC3Net's success criterion). Everything is pure and fixed-shape:
+cars that have exited (or not yet entered) are masked, never removed.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EnvConfig(NamedTuple):
+    n_agents: int = 4
+    size: int = 7
+    vision: int = 1
+    max_steps: int = 24
+    time_penalty: float = -0.01       # ·τ (steps since entry) per step
+    collision_penalty: float = -1.0
+
+
+class EnvState(NamedTuple):
+    route: jax.Array      # (A,) int32 ∈ {0, 1}
+    enter_t: jax.Array    # (A,) int32 — step at which each car enters
+    prog: jax.Array       # (A,) int32 ∈ [0, size]; == size ⇒ exited
+    collided: jax.Array   # () bool — any collision so far this episode
+    cleared: jax.Array    # () bool — have all cars exited the grid
+    t: jax.Array          # () int32
+
+
+N_ACTIONS = 2  # 0 = brake, 1 = gas
+
+
+def obs_dim(cfg: EnvConfig) -> int:
+    # route one-hot (2) + progress one-hot (size+1) + on-road flag
+    # + occupancy window of the other cars ((2v+1)^2)
+    return 2 + cfg.size + 1 + 1 + (2 * cfg.vision + 1) ** 2
+
+
+def n_actions(cfg: EnvConfig) -> int:
+    return N_ACTIONS
+
+
+def positions(state: EnvState, cfg: EnvConfig) -> jax.Array:
+    """(A, 2) int32 grid cells; exited cars are clipped to the last cell."""
+    mid = cfg.size // 2
+    p = jnp.clip(state.prog, 0, cfg.size - 1)
+    on_row = jnp.stack([jnp.full_like(p, mid), p], axis=1)   # route 0
+    on_col = jnp.stack([p, jnp.full_like(p, mid)], axis=1)   # route 1
+    return jnp.where(state.route[:, None] == 0, on_row, on_col)
+
+
+def active(state: EnvState, cfg: EnvConfig) -> jax.Array:
+    """(A,) bool — entered and not yet exited."""
+    return (state.t >= state.enter_t) & (state.prog < cfg.size)
+
+
+def reset(key: jax.Array, cfg: EnvConfig) -> EnvState:
+    kr, ke = jax.random.split(key)
+    a = cfg.n_agents
+    route = jax.random.bernoulli(kr, 0.5, (a,)).astype(jnp.int32)
+    # distinct entry steps: collisions come from policy, not the spawner
+    enter_t = jax.random.permutation(ke, jnp.arange(a, dtype=jnp.int32))
+    return EnvState(route=route, enter_t=enter_t,
+                    prog=jnp.zeros((a,), jnp.int32),
+                    collided=jnp.zeros((), bool),
+                    cleared=jnp.zeros((), bool),
+                    t=jnp.zeros((), jnp.int32))
+
+
+def observe(state: EnvState, cfg: EnvConfig) -> jax.Array:
+    """(A, obs_dim) float32 observations."""
+    a = cfg.n_agents
+    v = cfg.vision
+    w = 2 * v + 1
+    act = active(state, cfg)
+    pos = positions(state, cfg)
+    route_oh = jax.nn.one_hot(state.route, 2)
+    prog_oh = jax.nn.one_hot(jnp.clip(state.prog, 0, cfg.size), cfg.size + 1)
+    off = pos[None, :, :] - pos[:, None, :]                  # (A, A, 2)
+    inwin = jnp.all(jnp.abs(off) <= v, axis=-1)
+    inwin = inwin & act[None, :] & act[:, None]
+    inwin = inwin & ~jnp.eye(a, dtype=bool)
+    widx = (off[..., 0] + v) * w + (off[..., 1] + v)
+    occ = jnp.sum(jax.nn.one_hot(jnp.clip(widx, 0, w * w - 1), w * w)
+                  * inwin[..., None], axis=1)
+    occ = jnp.clip(occ, 0.0, 1.0)                            # (A, w²)
+    return jnp.concatenate(
+        [route_oh, prog_oh, act[:, None].astype(jnp.float32), occ], axis=1)
+
+
+def step(state: EnvState, actions: jax.Array,
+         cfg: EnvConfig) -> tuple[EnvState, jax.Array, jax.Array]:
+    """actions: (A,) int32 ∈ {0, 1}. Returns (new_state, rewards (A,), done)."""
+    act = active(state, cfg)
+    gas = (actions > 0) & act
+    prog = jnp.clip(state.prog + gas.astype(jnp.int32), 0, cfg.size)
+    nstate = state._replace(prog=prog)
+    # activity at the *post-step* time: a car entering at t+1 spawns onto
+    # its entry cell now, so sitting on that cell is a collision already
+    now = (state.t + 1 >= state.enter_t) & (prog < cfg.size)
+    pos = positions(nstate, cfg)
+    # cell id per car; off-road cars get a unique sentinel so they never match
+    cell = pos[:, 0] * cfg.size + pos[:, 1]
+    cell = jnp.where(now, cell, cfg.size * cfg.size + jnp.arange(cfg.n_agents))
+    share = jnp.sum(cell[:, None] == cell[None, :], axis=1) - 1
+    coll = share > 0                                         # (A,) bool
+    tau = (state.t + 1 - state.enter_t).astype(jnp.float32)
+    rewards = jnp.where(
+        now,
+        cfg.time_penalty * tau
+        + cfg.collision_penalty * coll.astype(jnp.float32),
+        0.0)
+    t = state.t + 1
+    cleared = jnp.all(prog >= cfg.size)
+    done = cleared | (t >= cfg.max_steps)
+    return EnvState(route=state.route, enter_t=state.enter_t, prog=prog,
+                    collided=state.collided | jnp.any(coll),
+                    cleared=cleared, t=t), \
+        rewards, done
+
+
+def success(state: EnvState) -> jax.Array:
+    # no collision AND every car cleared the grid — an all-brake policy
+    # that just waits out the episode does not count as a success
+    return ~state.collided & state.cleared

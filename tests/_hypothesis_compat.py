@@ -1,0 +1,59 @@
+"""Use hypothesis when installed; fall back to deterministic sampling.
+
+The property tests only need ``@given`` with ``st.integers`` /
+``st.sampled_from`` and ``@settings(max_examples=..., deadline=None)``.
+When the real ``hypothesis`` package is available (CI installs it via the
+``test`` extra) it is re-exported unchanged. Otherwise this module provides
+a minimal stand-in that runs each property on a fixed-seed random sample of
+the strategy space — fewer examples, no shrinking, but the invariants still
+execute everywhere the bare runtime deps are installed.
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when hypothesis missing
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 5  # keep the dependency-free path fast
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    def settings(max_examples=None, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                limit = getattr(wrapper, "_max_examples", None) \
+                    or getattr(fn, "_max_examples", None) or 10
+                rng = random.Random(0x5EED)
+                for _ in range(min(limit, _FALLBACK_EXAMPLES)):
+                    fn(**{k: s.draw(rng) for k, s in strats.items()})
+            # pytest must see the zero-arg signature, not fn's via __wrapped__
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

@@ -66,6 +66,7 @@ def test_parity_ssm_decode():
     _full_then_decode(cfg, seq=10, atol=5e-2)
 
 
+@pytest.mark.slow
 def test_parity_hybrid_jamba():
     cfg = registry.get_smoke_config("jamba_1_5_large")
     _full_then_decode(cfg, seq=8, atol=5e-2)

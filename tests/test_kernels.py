@@ -46,8 +46,10 @@ def test_grouped_bmm_matches_einsum(g, b, m, n, dtype):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("m,n,g,b", [
-    (64, 64, 4, 8), (128, 96, 8, 16), (96, 128, 2, 4), (256, 256, 16, 8),
-    (80, 48, 4, 3),
+    (64, 64, 4, 8), (96, 128, 2, 4),
+    pytest.param(128, 96, 8, 16, marks=pytest.mark.slow),
+    pytest.param(256, 256, 16, 8, marks=pytest.mark.slow),
+    pytest.param(80, 48, 4, 3, marks=pytest.mark.slow),
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_grouped_matmul_matches_ref(m, n, g, b, dtype):

@@ -10,7 +10,11 @@ from repro.models import transformer
 from repro.train import state as state_lib
 from repro.train import step as step_lib
 
-LM_ARCHS = [a for a in registry.ARCH_IDS if a != "ic3net"]
+# big smoke configs compile for minutes on CPU; tier-1 keeps the small ones
+_HEAVY_ARCHS = {"jamba_1_5_large", "gemma3_12b", "gemma2_27b",
+                "internlm2_20b", "mixtral_8x22b", "arctic_480b"}
+LM_ARCHS = [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY_ARCHS
+            else a for a in registry.ARCH_IDS if a != "ic3net"]
 
 
 def _batch(cfg, b=2, s=32):
