@@ -23,6 +23,24 @@ def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     return times[len(times) // 2]
 
 
+def timeit_interleaved(fns: dict, *args, reps: int = 12) -> dict:
+    """Min wall seconds per call for several jit'd fns measured round-robin.
+
+    Interleaving makes slow drifts in machine load hit every variant
+    equally, and min (unlike median) is robust to load spikes — use this
+    when *comparing* variants on a shared host.
+    """
+    for fn in fns.values():
+        jax.block_until_ready(fn(*args))        # compile + warm
+    best = {name: float("inf") for name in fns}
+    for _ in range(reps):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return best
+
+
 def save(name: str, payload) -> pathlib.Path:
     RESULTS.mkdir(parents=True, exist_ok=True)
     path = RESULTS / f"{name}.json"

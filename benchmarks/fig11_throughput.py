@@ -13,6 +13,12 @@ the *model* behind the figure, grounded in measured quantities:
 
 Reported: effective GFLOPS for the FPGA-model (paper's 257.4 dense,
 3629.5 @G=16 claims as anchors) and the TPU-scaled equivalent.
+
+``--real`` additionally sweeps *measured* runs of the MARL engine: the
+training loop now accumulates per-iteration throughput (steps/s, realised
+mask sparsity, estimated sparse GFLOPS) from inside the on-device scan, so
+the paper's three sweeps (agents / batch / group number) can be driven by
+real `train()` calls on this host instead of synthetic shapes.
 """
 from __future__ import annotations
 
@@ -74,5 +80,66 @@ def main() -> dict:
     return out
 
 
+def real_sweep(iterations: int = 24, hidden: int = 64) -> dict:
+    """Paper Fig. 11 sweeps measured on real ``train()`` runs.
+
+    Each point runs the on-device scan (grouped path where G > 1, plan
+    refresh every 4 iterations) and reads the throughput metrics the loop
+    accumulates; the first half of each history (compile-heavy) is
+    discarded.
+    """
+    from repro.core.schedule import SparsitySchedule
+    from repro.marl import envs, ic3net
+    from repro.marl import train as train_mod
+
+    def measure(agents: int, batch: int, groups: int) -> dict:
+        cfg = ic3net.IC3NetConfig(
+            hidden=hidden, flgw_groups=groups,
+            flgw_path="grouped" if groups > 1 else "masked")
+        env, ecfg = envs.make("predator_prey", n_agents=agents)
+        sched = (SparsitySchedule(groups=groups, refresh_every=4)
+                 if groups > 1 else None)
+        _, hist = train_mod.train(cfg, ecfg, train_mod.TrainConfig(
+            batch=batch), iterations=iterations, seed=0, env=env,
+            schedule=sched, log_every=max(2, iterations // 4))
+        tail = hist[len(hist) // 2:]
+        mean = lambda key: sum(h[key] for h in tail) / len(tail)
+        return {"steps_per_s": mean("steps_per_s"),
+                "env_steps_per_s": mean("env_steps_per_s"),
+                "sparse_gflops": mean("sparse_gflops"),
+                "mask_sparsity": mean("mask_sparsity")}
+
+    out = {"cells": []}
+    row("# fig11 --real: measured engine throughput (this host, "
+        f"hidden={hidden}, {iterations} iters/point)")
+    row("sweep", "value", "steps_per_s", "env_steps_per_s",
+        "est_sparse_gflops", "mask_sparsity")
+    sweeps = ([("agents", a, dict(agents=a, batch=8, groups=4))
+               for a in (3, 6, 10)]
+              + [("batch", b, dict(agents=3, batch=b, groups=4))
+                 for b in (1, 8, 32)]
+              + [("groups", g, dict(agents=3, batch=8, groups=g))
+                 for g in (1, 4, 16)])
+    for sweep, value, kw in sweeps:
+        cell = measure(**kw)
+        row(sweep, value, f"{cell['steps_per_s']:.2f}",
+            f"{cell['env_steps_per_s']:.0f}",
+            f"{cell['sparse_gflops']:.3f}", f"{cell['mask_sparsity']:.3f}")
+        out["cells"].append({"sweep": sweep, "value": value, **cell})
+    save("fig11_throughput_real", out)
+    return out
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--real", action="store_true",
+                    help="sweep measured train() runs instead of the "
+                         "accelerator model")
+    ap.add_argument("--iterations", type=int, default=24)
+    ap.add_argument("--hidden", type=int, default=64)
+    args = ap.parse_args()
+    if args.real:
+        real_sweep(iterations=args.iterations, hidden=args.hidden)
+    else:
+        main()

@@ -13,13 +13,20 @@ two quantities for the TPU-path implementation:
 and report the generation share as the batch grows (the paper's fixed
 G sweep is the B=32 column), plus the share under mask-refresh
 amortization (core/schedule.py's refresh_every knob).
+
+The second section *measures* that amortization end to end: a jitted
+K-step training scan over a recurrent FLGW stack, comparing the plan
+cache carried through the scan and re-encoded every ``refresh_every``
+steps (``maybe_refresh_plans``-style ``lax.cond``) against the per-call
+fallback that re-derives the plan inside every projection of the
+unrolled T-step forward — the paper's GPU-baseline placement.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import row, save, timeit
+from benchmarks.common import row, save, timeit, timeit_interleaved
 from repro.core.flgw import FLGWConfig, init_grouping
 from repro.core.grouped import grouped_apply, make_plan
 
@@ -65,8 +72,93 @@ def main() -> dict:
                                  "share_refresh4_pct": share4})
     row("# paper: GPU ~31% sparse-gen share; LearningGroup (OSEL) ~2.9%,")
     row("# falling further as batch grows — same trend here.")
+    out["amortization"] = amortization()
     save("fig12_breakdown", out)
     return out
+
+
+def amortization(m: int = 256, layers: int = 4, batch: int = 1,
+                 t_steps: int = 1, k_steps: int = 32, g: int = 16) -> dict:
+    """Measured per-step time of plan-amortized vs per-call grouped training.
+
+    One jitted chunk = ``k_steps`` training iterations in a ``lax.scan``;
+    each computes grads of a ``t_steps``-long forward through ``layers``
+    FLGW layers and SGD-updates weights *and* grouping matrices (so the
+    encode inputs change every iteration — XLA cannot hoist the per-call
+    encode out of the loop). Defaults sit in the paper's B=1 column, where
+    Fig. 12 puts the sparse-generation share at its peak. Variants:
+
+    * ``per_call``  — plan=None: re-encoded inside every projection
+                      (L encodes per iteration);
+    * ``refresh_k`` — PlanState carried through the scan, re-encoded via
+                      ``lax.cond`` every k iterations (L/k encodes per
+                      iteration, the OSEL amortization).
+
+    Runs on the jnp reference lowering of the grouped kernel (identical
+    math; interpret-mode Pallas on CPU would inflate the compute term and
+    bury the encode share the measurement is about).
+    """
+    key = jax.random.PRNGKey(42)
+    cfg = FLGWConfig(groups=g, path="grouped")
+    gm = [init_grouping(jax.random.fold_in(key, i), m, m, g)
+          for i in range(layers)]
+    igs = [p["ig"] for p in gm]
+    ogs = [p["og"] for p in gm]
+    ws = [jax.random.normal(jax.random.fold_in(key, 10 + i), (m, m)) * 0.1
+          for i in range(layers)]
+    x = jax.random.normal(jax.random.fold_in(key, 99), (batch, m))
+
+    def loss(ws, igs, ogs, plans):
+        def body(h, _):
+            for i in range(layers):
+                pl = None if plans is None else plans[i]
+                h = jnp.tanh(grouped_apply(h, ws[i], igs[i], ogs[i], cfg,
+                                           plan=pl))
+            return h, None
+        h, _ = jax.lax.scan(body, x, None, length=t_steps)
+        return jnp.mean(h ** 2)
+
+    def chunk(refresh):
+        def run(ws, igs, ogs, plans):
+            def body(carry, it):
+                ws, igs, ogs, plans = carry
+                if refresh is not None:
+                    def fresh():
+                        return [make_plan(ig, og, cfg.capacity_slack)
+                                for ig, og in zip(igs, ogs)]
+                    plans = fresh() if refresh == 1 else jax.lax.cond(
+                        it % refresh == 0, fresh, lambda: plans)
+                cur = plans if refresh is not None else None
+                gw, gi, go = jax.grad(loss, argnums=(0, 1, 2))(
+                    ws, igs, ogs, cur)
+                ws = [w - 1e-3 * d for w, d in zip(ws, gw)]
+                igs = [a - 1e-3 * d for a, d in zip(igs, gi)]
+                ogs = [a - 1e-3 * d for a, d in zip(ogs, go)]
+                return (ws, igs, ogs, plans), ()
+            carry, _ = jax.lax.scan(body, (ws, igs, ogs, plans),
+                                    jnp.arange(k_steps))
+            return carry[0][0]
+        return jax.jit(run)
+
+    plans0 = [make_plan(ig, og, cfg.capacity_slack)
+              for ig, og in zip(igs, ogs)]
+    row(f"# amortization: {k_steps}-step scan, {layers}x({m}x{m}) G={g}, "
+        f"batch {batch}, T={t_steps} fwd, grads+SGD each step")
+    row("variant", "per_step_us", "speedup_vs_per_call")
+    variants = (("per_call", None), ("refresh_1", 1),
+                ("refresh_4", 4), ("refresh_8", 8))
+    from repro.kernels.flgw_matmul import ops as kops
+    with kops.use_reference_impl():
+        best = timeit_interleaved({n: chunk(r) for n, r in variants},
+                                  ws, igs, ogs, plans0)
+    t_base = best["per_call"] / k_steps
+    result = {}
+    for name, _ in variants:
+        t = best[name] / k_steps
+        result[name] = {"per_step_s": t, "speedup": t_base / t}
+        row(name, f"{t * 1e6:.0f}", f"{t_base / t:.2f}")
+    row("# acceptance: refresh_every >= 4 must beat per-call make_plan")
+    return result
 
 
 if __name__ == "__main__":

@@ -39,6 +39,9 @@ def main(argv=None):
     ap.add_argument("--warmup", type=int, default=0,
                     help="train dense for this many iterations before "
                          "enabling the FLGW mask")
+    ap.add_argument("--refresh", type=int, default=1,
+                    help="re-encode the grouped path's plan cache every k "
+                         "iterations (OSEL amortization; 1 = every step)")
     ap.add_argument("--parallel", action="store_true",
                     help="pmap the env batch over local devices")
     ap.add_argument("--host-loop", action="store_true",
@@ -52,8 +55,9 @@ def main(argv=None):
                               size=args.size, max_steps=3 * args.size)
     tcfg = train_mod.TrainConfig(batch=args.batch, parallel=args.parallel)
     schedule = SparsitySchedule(groups=args.groups,
-                                warmup_steps=args.warmup) \
-        if args.warmup else None
+                                warmup_steps=args.warmup,
+                                refresh_every=args.refresh) \
+        if (args.warmup or args.refresh > 1) else None
     print(f"IC3Net on {args.env} A={args.agents} hidden={args.hidden} "
           f"FLGW G={args.groups} ({args.path}) "
           f"-> expected sparsity {100 * (1 - 1 / max(args.groups, 1)):.1f}%"
@@ -67,6 +71,12 @@ def main(argv=None):
     k = max(1, len(succ) // 10)
     print(f"success: first-{k} {succ[:k].mean():.3f}  "
           f"last-{k} {succ[-k:].mean():.3f}")
+    # throughput from inside the scan (skip the compile-heavy first window)
+    tail = hist[len(hist) // 2:]
+    print(f"throughput: {np.mean([h['steps_per_s'] for h in tail]):.2f} "
+          f"iters/s, {np.mean([h['env_steps_per_s'] for h in tail]):.0f} "
+          f"env-steps/s, est. sparse "
+          f"{np.mean([h['sparse_gflops'] for h in tail]):.3f} GFLOPS")
 
     if args.groups > 1:
         # realised sparsity of each learned FLGW layer

@@ -4,6 +4,7 @@ from repro.core.flgw import (  # noqa: F401
     mask_ste, flgw_linear, mask_sparsity, selection_matrices,
 )
 from repro.core.grouped import (  # noqa: F401
-    GroupPlan, balanced_assign, make_plan, grouped_apply,
+    GroupPlan, PlanState, balanced_assign, make_plan, transpose_plan,
+    encode_plans, grouped_apply,
 )
 from repro.core import osel  # noqa: F401

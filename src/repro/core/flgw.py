@@ -119,12 +119,16 @@ def mask_ste(ig: jax.Array, og: jax.Array, temperature: float = 1.0) -> jax.Arra
 # ---------------------------------------------------------------------------
 
 def flgw_linear(x: jax.Array, w: jax.Array, ig: jax.Array, og: jax.Array,
-                cfg: FLGWConfig, *, transpose: bool = False) -> jax.Array:
+                cfg: FLGWConfig, *, transpose: bool = False,
+                plan=None) -> jax.Array:
     """Apply a FLGW-masked linear layer ``y = x @ (W ⊙ Mask)``.
 
     ``transpose=True`` computes ``y = x @ (W ⊙ Mask)^T`` using the paper's
     weight-transpose trick: Mask^T has the same index structure with IG/OG
     roles swapped, so no transposed metadata is stored.
+
+    ``plan`` is precomputed sparse metadata (``grouped.GroupPlan``) for the
+    grouped path — the cached OSEL encoding; ``None`` re-derives it per call.
     """
     if not cfg.enabled:
         return x @ (w.T if transpose else w)
@@ -136,16 +140,19 @@ def flgw_linear(x: jax.Array, w: jax.Array, ig: jax.Array, og: jax.Array,
         # Compact path. Gradient flows to W through the gathered tiles and to
         # IG/OG through a (cheap) STE correction term; see grouped_apply.
         from repro.core.grouped import grouped_apply  # local import: avoids cycle
-        return grouped_apply(x, w, ig, og, cfg, transpose=transpose)
+        return grouped_apply(x, w, ig, og, cfg, transpose=transpose,
+                             plan=plan)
     raise ValueError(f"unknown FLGW path {cfg.path!r}")
 
 
 def mask_sparsity(ig_idx: jax.Array, og_idx: jax.Array,
-                  groups: int = 64) -> jax.Array:
+                  groups: int) -> jax.Array:
     """Actual (not expected) sparsity of the current mask.
 
     ``nnz = Σ_g rows_g · cols_g`` — the mask is a union of G dense rectangles
     (OSEL observation 2), so sparsity follows from the two group histograms.
+    ``groups`` is required: a too-small G silently truncates the bincount
+    histograms and overstates sparsity (pass the layer's G, or ``ig.shape[1]``).
     """
     total = ig_idx.shape[0] * og_idx.shape[0]
     rows = jnp.bincount(ig_idx, length=groups)

@@ -25,10 +25,11 @@ against the paper's threshold/row-based schemes in benchmarks/table1).
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.flgw_matmul import ops as kops
 from repro.sharding.partition import constrain
@@ -111,6 +112,60 @@ def make_plan(ig: jax.Array, og: jax.Array,
                      row_group, col_group)
 
 
+def transpose_plan(plan: GroupPlan) -> GroupPlan:
+    """Plan of Mask^T — the weight-transpose trick on cached metadata.
+
+    ``make_plan(og.T, ig.T)`` is exactly the row/col swap of
+    ``make_plan(ig, og)`` (``balanced_assign(og, axis=0) ==
+    balanced_assign(og.T, axis=1)``), so the transposed layout is free:
+    no re-encoding, matching the paper's transposed-encode reuse (§III-B).
+    """
+    return GroupPlan(row_ids=plan.col_ids, col_ids=plan.row_ids,
+                     row_valid=plan.col_valid, col_valid=plan.row_valid,
+                     row_group=plan.col_group, col_group=plan.row_group)
+
+
+# ---------------------------------------------------------------------------
+# PlanState: one GroupPlan per FLGW layer of a param tree (OSEL analogue)
+# ---------------------------------------------------------------------------
+
+# A PlanState mirrors a params pytree: nested dict whose leaves are the
+# GroupPlan of every projection dict carrying ig/og grouping matrices.
+PlanState = dict[str, Any]
+
+
+def iter_flgw_layers(params: dict, _path=()):
+    """Yield ``(path, layer_dict)`` for every FLGW-carrying projection —
+    any nested dict holding ``ig``/``og`` grouping matrices. The single
+    source of truth for walking a param tree's FLGW structure."""
+    for name, p in params.items():
+        if not isinstance(p, dict):
+            continue
+        if "ig" in p:
+            yield (*_path, name), p
+        else:
+            yield from iter_flgw_layers(p, (*_path, name))
+
+
+def encode_plans(params: dict, cfg) -> PlanState:
+    """One encoding pass over a param tree — the OSEL loop's TPU analogue.
+
+    The paper encodes the FLGW mask *once per iteration* into compact
+    sparse metadata that the whole forward/backward then reuses (§III-B).
+    Here that metadata is the capacity-balanced :class:`GroupPlan`; this
+    builds one per FLGW-carrying projection so callers can cache and
+    re-encode it on their own schedule instead of re-deriving it inside
+    every projection. The PlanState mirrors the params nesting.
+    """
+    plans: PlanState = {}
+    for path, p in iter_flgw_layers(params):
+        node = plans
+        for name in path[:-1]:
+            node = node.setdefault(name, {})
+        node[path[-1]] = make_plan(p["ig"], p["og"], cfg.capacity_slack)
+    return plans
+
+
 # ---------------------------------------------------------------------------
 # Compact apply with custom VJP
 # ---------------------------------------------------------------------------
@@ -129,24 +184,28 @@ def _gather_w(w, plan: GroupPlan):
                      wc, 0)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
-def _grouped_core(x, w, ig, og, temperature: float, slack: float,
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _grouped_core(x, w, ig, og, plan: GroupPlan, temperature: float,
                   interpret: bool, impl: str):
-    plan = make_plan(ig, og, slack)
+    """Compact matmul against *precomputed* sparse metadata.
+
+    The plan is a VJP input (not rebuilt in fwd/bwd): the backward pass
+    reuses the very same metadata via the transpose trick, so one encode
+    serves the whole step — the paper's OSEL amortization.
+    """
     return kops.grouped_matmul(x, w, plan.row_ids, plan.col_ids,
                                plan.row_valid, plan.col_valid,
                                interpret=interpret, impl=impl)
 
 
-def _grouped_fwd(x, w, ig, og, temperature, slack, interpret, impl):
-    plan = make_plan(ig, og, slack)
+def _grouped_fwd(x, w, ig, og, plan, temperature, interpret, impl):
     y = kops.grouped_matmul(x, w, plan.row_ids, plan.col_ids,
                             plan.row_valid, plan.col_valid,
                             interpret=interpret, impl=impl)
     return y, (x, w, ig, og, plan)
 
 
-def _grouped_bwd(temperature, slack, interpret, impl, res, gy):
+def _grouped_bwd(temperature, interpret, impl, res, gy):
     x, w, ig, og, plan = res
     b = x.shape[0]
     m, g = ig.shape
@@ -201,24 +260,36 @@ def _grouped_bwd(temperature, slack, interpret, impl, res, gy):
     sel_c = jnp.sum(soft_og * pg_col, axis=0, keepdims=True)
     dog = (s_col[None, :] / tau) * sel_c * (pg_col - soft_og)
 
-    return dx, dw, dig.astype(ig.dtype), dog.astype(og.dtype)
+    # Plan entries are int/bool metadata: their cotangent type is float0.
+    dplan = jax.tree.map(lambda a: np.zeros(a.shape, jax.dtypes.float0),
+                         plan)
+    return dx, dw, dig.astype(ig.dtype), dog.astype(og.dtype), dplan
 
 
 _grouped_core.defvjp(_grouped_fwd, _grouped_bwd)
 
 
 def grouped_apply(x: jax.Array, w: jax.Array, ig: jax.Array, og: jax.Array,
-                  cfg, *, transpose: bool = False) -> jax.Array:
-    """Compact FLGW linear. ``x``: (..., M) (or (..., N) when transposed)."""
+                  cfg, *, transpose: bool = False,
+                  plan: Optional[GroupPlan] = None) -> jax.Array:
+    """Compact FLGW linear. ``x``: (..., M) (or (..., N) when transposed).
+
+    ``plan`` is the cached sparse metadata of the *untransposed* layer
+    (see :func:`encode_plans`); when omitted the plan is re-derived here —
+    the unamortized fallback, one encode per projection call.
+    """
     interpret = kops.default_interpret()
     impl = "reference" if kops._REF_MODE else "pallas"
     if transpose:
         # y = x @ (W ⊙ M)^T == grouped(x, W^T) with IG/OG roles swapped.
         w_t, ig_t, og_t = w.T, og.T, ig.T
+        plan = transpose_plan(plan) if plan is not None else None
     else:
         w_t, ig_t, og_t = w, ig, og
+    if plan is None:
+        plan = make_plan(ig_t, og_t, cfg.capacity_slack)
     lead = x.shape[:-1]
     xf = x.reshape(-1, x.shape[-1])
-    y = _grouped_core(xf, w_t, ig_t, og_t, cfg.ste_temperature,
-                      cfg.capacity_slack, interpret, impl)
+    y = _grouped_core(xf, w_t, ig_t, og_t, plan, cfg.ste_temperature,
+                      interpret, impl)
     return y.reshape(*lead, -1)

@@ -78,3 +78,15 @@ def _register_module(name: str, mod) -> Env:
 PREDATOR_PREY = _register_module("predator_prey", predator_prey)
 TRAFFIC_JUNCTION = _register_module("traffic_junction", traffic_junction)
 SPREAD = _register_module("spread", spread)
+
+# Hard TJ: same step/observe dynamics, but a bigger grid, more cars and a
+# dense Bernoulli(p_arrive) arrival stream (its own config + reset).
+TRAFFIC_JUNCTION_HARD = register(Env(
+    name="traffic_junction_hard",
+    config_cls=traffic_junction.HardConfig,
+    reset=traffic_junction.reset_hard,
+    step=traffic_junction.step,
+    observe=traffic_junction.observe,
+    success=traffic_junction.success,
+    obs_dim=traffic_junction.obs_dim,
+    n_actions=traffic_junction.n_actions))

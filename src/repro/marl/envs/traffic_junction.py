@@ -136,3 +136,51 @@ def success(state: EnvState) -> jax.Array:
     # no collision AND every car cleared the grid — an all-brake policy
     # that just waits out the episode does not count as a success
     return ~state.collided & state.cleared
+
+
+# ---------------------------------------------------------------------------
+# Hard variant — IC3Net's harder TJ regime: bigger grid, more cars, and a
+# dense Bernoulli(p_arrive) arrival stream instead of one-car-per-step
+# staggering, so several cars contest the junction at once.
+# ---------------------------------------------------------------------------
+
+class HardConfig(NamedTuple):
+    n_agents: int = 10
+    size: int = 11
+    vision: int = 1
+    max_steps: int = 60
+    time_penalty: float = -0.01
+    collision_penalty: float = -1.0
+    p_arrive: float = 0.7             # per-step arrival probability
+
+
+def reset_hard(key: jax.Array, cfg: HardConfig) -> EnvState:
+    """Entry gaps drawn Geometric(p_arrive): the i-th car enters one gap
+    after the (i-1)-th, so a higher ``p_arrive`` packs more cars onto the
+    road simultaneously. Entries stay *strictly increasing* even when the
+    tail is squeezed so every car can still clear before ``max_steps`` —
+    two cars must never share an entry step, or same-route pairs would
+    spawn collided and no policy could succeed (collisions have to come
+    from policy, as in the easy env).
+    """
+    kr, ke = jax.random.split(key)
+    a = cfg.n_agents
+    route = jax.random.bernoulli(kr, 0.5, (a,)).astype(jnp.int32)
+    p = min(max(cfg.p_arrive, 1e-3), 1.0)
+    if p >= 1.0:
+        gaps = jnp.ones((a,), jnp.int32)
+    else:
+        u = jax.random.uniform(ke, (a,), minval=1e-6, maxval=1.0)
+        gaps = 1 + jnp.floor(jnp.log(u) / jnp.log1p(-p)).astype(jnp.int32)
+    enter_t = jnp.cumsum(gaps) - gaps[0]                 # first car at t=0
+    # squeeze the tail under the feasibility budget while keeping entries
+    # strictly increasing: car i may enter no later than cap - (a-1-i),
+    # and (fallback when even that is infeasible) no earlier than i
+    cap = max(0, cfg.max_steps - cfg.size - 1)
+    idx = jnp.arange(a)
+    enter_t = jnp.maximum(idx, jnp.minimum(enter_t, cap - (a - 1 - idx)))
+    return EnvState(route=route, enter_t=enter_t.astype(jnp.int32),
+                    prog=jnp.zeros((a,), jnp.int32),
+                    collided=jnp.zeros((), bool),
+                    cleared=jnp.zeros((), bool),
+                    t=jnp.zeros((), jnp.int32))

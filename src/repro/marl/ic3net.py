@@ -18,8 +18,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import grouped
 from repro.core.flgw import FLGWConfig
-from repro.models.layers import dense_init, proj
+from repro.models.layers import dense_init, plan_of, proj
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,10 +69,39 @@ def init(key: jax.Array, cfg: IC3NetConfig):
     return params, specs
 
 
-def lstm_cell(params, cfg: IC3NetConfig, x, hc):
+def encode_plans(params, cfg: IC3NetConfig) -> grouped.PlanState:
+    """One OSEL-analogue pass: the GroupPlan of every FLGW layer.
+
+    Returns ``{}`` unless the compact ``grouped`` path is active — the
+    masked/dense paths never consume plans, and an empty dict keeps the
+    training-loop carry structure uniform across configurations.
+    """
+    fl = cfg.flgw
+    if fl is None or fl.path != "grouped":
+        return {}
+    return grouped.encode_plans(params, fl)
+
+
+def flops_per_step(cfg: IC3NetConfig) -> float:
+    """Dense-equivalent FLOPs of one forward ``policy_step`` (all agents).
+
+    The same accounting the paper's Fig. 11 uses: 2·M·N per projection,
+    summed over encoder, the two 4H LSTM gate matrices, the communication
+    projection and the three heads.
+    """
+    h = cfg.hidden
+    per_agent = 2 * (cfg.obs_dim * h          # encoder
+                     + h * 4 * h * 2          # LSTM x/h gates
+                     + h * h                  # comm projection
+                     + h * cfg.n_actions + h + h * 2)  # policy/value/gate
+    return float(cfg.n_agents * per_agent)
+
+
+def lstm_cell(params, cfg: IC3NetConfig, x, hc, plans=None):
     h, c = hc
     fl = cfg.flgw
-    gates = proj(params["lstm_x"], x, fl) + proj(params["lstm_h"], h, fl) \
+    gates = proj(params["lstm_x"], x, fl, plan=plan_of(plans, "lstm_x")) \
+        + proj(params["lstm_h"], h, fl, plan=plan_of(plans, "lstm_h")) \
         + params["lstm_b"]
     i, f, g, o = jnp.split(gates, 4, axis=-1)
     c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
@@ -79,27 +109,30 @@ def lstm_cell(params, cfg: IC3NetConfig, x, hc):
     return h, c
 
 
-def policy_step(params, cfg: IC3NetConfig, obs, hc, gate_prev):
+def policy_step(params, cfg: IC3NetConfig, obs, hc, gate_prev, plans=None):
     """One communication+action step for all agents of one env.
 
     obs: (A, obs_dim); hc: ((A,H),(A,H)); gate_prev: (A,) float in [0,1] —
     the previous step's communication gate decision per agent.
+    ``plans``: cached sparse metadata from :func:`encode_plans` (grouped
+    path); ``None``/``{}`` re-encodes inside each projection.
     Returns (action_logits (A,n_act), value (A,), gate_logits (A,2), new_hc).
     """
     a = cfg.n_agents
     fl = cfg.flgw
     h, c = hc
     comm_src = jax.lax.stop_gradient(h) if cfg.comm_detach else h
-    cvec = proj(params["comm"], comm_src, fl)            # (A, H)
+    cvec = proj(params["comm"], comm_src, fl,
+                plan=plan_of(plans, "comm"))             # (A, H)
     cvec = cvec * gate_prev[:, None]
     # gated mean over the *other* agents
     total = jnp.sum(cvec, axis=0, keepdims=True)
     denom = max(a - 1, 1)
     comm_in = (total - cvec) / denom                      # (A, H)
-    e = jnp.tanh(proj(params["enc"], obs, fl))
+    e = jnp.tanh(proj(params["enc"], obs, fl, plan=plan_of(plans, "enc")))
     x = e + comm_in
-    h, c = lstm_cell(params, cfg, x, (h, c))
-    logits = proj(params["policy"], h, fl)
+    h, c = lstm_cell(params, cfg, x, (h, c), plans)
+    logits = proj(params["policy"], h, fl, plan=plan_of(plans, "policy"))
     value = proj(params["value"], h)[:, 0]
     gate_logits = proj(params["gate"], h)
     return logits, value, gate_logits, (h, c)

@@ -23,6 +23,7 @@ static: IG/OG shapes depend on it.)
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Any, Optional
 
@@ -30,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import flgw, grouped
 from repro.core.schedule import SparsitySchedule
 from repro.marl import envs as envs_mod
 from repro.marl import ic3net
@@ -47,7 +49,8 @@ class TrainConfig:
     parallel: bool = False        # pmap the env batch over local devices
 
 
-def rollout(params, key, cfg: ic3net.IC3NetConfig, ecfg, env: envs_mod.Env):
+def rollout(params, key, cfg: ic3net.IC3NetConfig, ecfg, env: envs_mod.Env,
+            plans=None):
     """One full episode for one env. Returns per-step tensors + success."""
     k_env, k_act = jax.random.split(key)
     state = env.reset(k_env, ecfg)
@@ -57,7 +60,7 @@ def rollout(params, key, cfg: ic3net.IC3NetConfig, ecfg, env: envs_mod.Env):
         state, hc, gate, done = carry
         obs = env.observe(state, ecfg)
         logits, value, gate_logits, hc = ic3net.policy_step(
-            params, cfg, obs, hc, gate)
+            params, cfg, obs, hc, gate, plans)
         action = jax.random.categorical(k, logits)              # (A,)
         logp = jax.nn.log_softmax(logits)
         logp_a = jnp.take_along_axis(logp, action[:, None], 1)[:, 0]
@@ -81,10 +84,11 @@ def rollout(params, key, cfg: ic3net.IC3NetConfig, ecfg, env: envs_mod.Env):
     return rew, logp, val, ent, gate_logp, gates, env.success(state)
 
 
-def a2c_loss(params, key, cfg, ecfg, tcfg: TrainConfig, env: envs_mod.Env):
+def a2c_loss(params, key, cfg, ecfg, tcfg: TrainConfig, env: envs_mod.Env,
+             plans=None):
     keys = jax.random.split(key, tcfg.batch)
     rew, logp, val, ent, gate_logp, gates, succ = jax.vmap(
-        lambda k: rollout(params, k, cfg, ecfg, env))(keys)
+        lambda k: rollout(params, k, cfg, ecfg, env, plans))(keys)
     # returns-to-go, (B, T, A)
     def disc(carry, r):
         carry = r + tcfg.gamma * carry
@@ -104,18 +108,51 @@ def a2c_loss(params, key, cfg, ecfg, tcfg: TrainConfig, env: envs_mod.Env):
                   "loss": loss}
 
 
+def _mean_mask_sparsity(params, cfg: ic3net.IC3NetConfig) -> jax.Array:
+    """Mean realised mask sparsity over the FLGW layers (0 when dense)."""
+    fl = cfg.flgw
+    if fl is None:
+        return jnp.zeros(())
+    vals = [flgw.mask_sparsity(*flgw.grouping_indices(p["ig"], p["og"]),
+                               fl.groups)
+            for _, p in grouped.iter_flgw_layers(params)]
+    return jnp.mean(jnp.stack(vals)) if vals else jnp.zeros(())
+
+
+def maybe_refresh_plans(params, plans, it, cfg: ic3net.IC3NetConfig,
+                        schedule: Optional[SparsitySchedule]):
+    """Amortized OSEL: re-encode the FLGW plan cache only on refresh steps.
+
+    ``plans`` is the PlanState carried through the training loop; every
+    ``schedule.refresh_every`` iterations (``it % k == 0``) it is re-encoded
+    from the current grouping matrices via one ``encode_plans`` pass, and
+    reused stale otherwise — the paper's once-per-iteration encoding,
+    further amortized over k steps. ``{}`` (non-grouped configs) passes
+    through untouched; ``it`` may be a traced int32 (``lax.cond`` inside).
+    """
+    if not plans:
+        return plans
+    k = 1 if schedule is None else max(1, schedule.refresh_every)
+    if k == 1:
+        return ic3net.encode_plans(params, cfg)
+    return jax.lax.cond(jnp.asarray(it, jnp.int32) % k == 0,
+                        lambda: ic3net.encode_plans(params, cfg),
+                        lambda: plans)
+
+
 def _loss_grads(params, key, it, cfg, ecfg, tcfg, env,
-                schedule: Optional[SparsitySchedule]):
+                schedule: Optional[SparsitySchedule], plans=None):
     """(metrics, grads) at global iteration ``it`` (traced int32).
 
     With a schedule, the first ``warmup_steps`` iterations run the dense
     path (mask off) via ``lax.cond`` — both branches share the same param
-    tree, so the G ramp happens inside the compiled loop.
+    tree, so the G ramp happens inside the compiled loop. ``plans`` is the
+    cached sparse metadata consumed by the grouped path.
     """
     def vag(c):
         def f(p, k):
             return jax.value_and_grad(a2c_loss, has_aux=True)(
-                p, k, c, ecfg, tcfg, env)
+                p, k, c, ecfg, tcfg, env, plans)
         return f
 
     ramped = (schedule is not None and schedule.warmup_steps > 0
@@ -126,24 +163,37 @@ def _loss_grads(params, key, it, cfg, ecfg, tcfg, env,
             schedule.sparse_at(it), vag(cfg), vag(dense_cfg), params, key)
     else:
         (_, metrics), grads = vag(cfg)(params, key)
+    metrics = dict(metrics)
+    # report the sparsity of the compute that actually ran: 0 on warmup
+    # iterations, where the dense branch executed full FLOPs
+    sparsity = _mean_mask_sparsity(params, cfg)
+    if ramped:
+        sparsity = jnp.where(schedule.sparse_at(it), sparsity, 0.0)
+    metrics["mask_sparsity"] = sparsity
     return metrics, grads
 
 
 @partial(jax.jit, static_argnames=("cfg", "ecfg", "tcfg", "env", "schedule"))
 def train_step(params, opt_state, key, cfg, ecfg, tcfg: TrainConfig,
                env: envs_mod.Env = None, schedule=None,
-               it: jax.Array | int = 0):
+               it: jax.Array | int = 0, plans=None):
     """One host-driven update (seed-compatible API; used for parity tests)."""
     env = env or envs_mod.PREDATOR_PREY
     metrics, grads = _loss_grads(params, key, jnp.asarray(it, jnp.int32),
-                                 cfg, ecfg, tcfg, env, schedule)
+                                 cfg, ecfg, tcfg, env, schedule, plans)
     params, opt_state = rmsprop(params, grads, opt_state, lr=tcfg.lr)
     return params, opt_state, metrics
 
 
-def _scan_chunk(params, opt_state, key, start, n, cfg, ecfg, tcfg, env,
-                schedule, axis=None):
+def _scan_chunk(params, opt_state, key, plans, start, n, cfg, ecfg, tcfg,
+                env, schedule, axis=None):
     """``n`` update iterations as one on-device ``lax.scan``.
+
+    The FLGW plan cache rides in the carry: each iteration first passes
+    through ``maybe_refresh_plans`` — a ``lax.cond`` that re-encodes the
+    sparse metadata every ``schedule.refresh_every`` steps and reuses the
+    carried (stale) plans otherwise, so the grouped Pallas kernel runs
+    against amortized metadata inside the compiled loop.
 
     ``axis`` names the pmap axis for gradient/metric ``pmean`` (None on the
     single-device path — the only difference between the two). Returns
@@ -151,20 +201,21 @@ def _scan_chunk(params, opt_state, key, start, n, cfg, ecfg, tcfg, env,
     window instead of syncing every step.
     """
     def body(carry, it):
-        params, opt_state, key = carry
+        params, opt_state, key, plans = carry
+        plans = maybe_refresh_plans(params, plans, it, cfg, schedule)
         key, k = jax.random.split(key)
         metrics, grads = _loss_grads(params, k, it, cfg, ecfg, tcfg, env,
-                                     schedule)
+                                     schedule, plans)
         if axis is not None:
             grads = jax.lax.pmean(grads, axis)
             metrics = jax.lax.pmean(metrics, axis)
         params, opt_state = rmsprop(params, grads, opt_state, lr=tcfg.lr)
-        return (params, opt_state, key), metrics
+        return (params, opt_state, key, plans), metrics
 
     its = start + jnp.arange(n, dtype=jnp.int32)
-    (params, opt_state, key), metrics = jax.lax.scan(
-        body, (params, opt_state, key), its)
-    return params, opt_state, key, metrics
+    (params, opt_state, key, plans), metrics = jax.lax.scan(
+        body, (params, opt_state, key, plans), its)
+    return params, opt_state, key, plans, metrics
 
 
 _train_chunk = partial(jax.jit,
@@ -174,8 +225,11 @@ _train_chunk = partial(jax.jit,
 # data-parallel chunk: each device rolls out tcfg.batch envs, the RMSprop
 # update stays replicated because the pmean'd grads are identical
 _train_chunk_pmap = partial(jax.pmap, axis_name="dev",
-                            static_broadcasted_argnums=(4, 5, 6, 7, 8, 9))(
+                            static_broadcasted_argnums=(5, 6, 7, 8, 9, 10))(
     partial(_scan_chunk, axis="dev"))
+
+_encode_plans = partial(jax.jit, static_argnames=("cfg",))(
+    ic3net.encode_plans)
 
 
 def _init(cfg, ecfg, env, seed):
@@ -195,7 +249,12 @@ def train(cfg: ic3net.IC3NetConfig, ecfg=None, tcfg: TrainConfig = None,
           host_loop: bool = False):
     """Train IC3Net on a registered environment; returns (params, history).
 
-    ``history`` is one dict of floats per iteration (success/return/loss).
+    ``history`` is one dict of floats per iteration: success/return/loss,
+    the realised ``mask_sparsity``, and host-derived throughput —
+    ``steps_per_s`` (training iterations/s), ``env_steps_per_s`` and
+    estimated ``sparse_gflops`` (dense-equivalent FLOPs scaled by the
+    measured mask sparsity over measured wall time; the first window of
+    the scan path includes compile time).
     The default path scans whole log windows on device; ``host_loop=True``
     drives one jitted update per iteration from Python (the seed loop,
     kept for parity testing and debugging).
@@ -206,25 +265,50 @@ def train(cfg: ic3net.IC3NetConfig, ecfg=None, tcfg: TrainConfig = None,
         ecfg = env.config_cls()
     tcfg = tcfg or TrainConfig()
     cfg, key, params, opt_state = _init(cfg, ecfg, env, seed)
+    # plan cache: encoded once here, then refreshed inside the loop every
+    # schedule.refresh_every iterations ({} when the grouped path is off)
+    plans = _encode_plans(params, cfg)
     history: list[dict] = []
+    ndev = jax.local_device_count()
+    use_pmap = not host_loop and tcfg.parallel and ndev > 1
+    # fwd + ~2x bwd dense-equivalent FLOPs of one training iteration;
+    # the pmap path rolls out tcfg.batch envs on *each* device
+    world = ndev if use_pmap else 1
+    flops_iter = (3 * world * tcfg.batch * ecfg.max_steps
+                  * ic3net.flops_per_step(cfg))
+
+    def throughput(ms: dict, n_iters: int, dt: float) -> dict:
+        rate = n_iters / max(dt, 1e-9)
+        return {
+            "steps_per_s": rate,
+            "env_steps_per_s": rate * world * tcfg.batch * ecfg.max_steps,
+            "sparse_gflops": rate * flops_iter
+            * (1.0 - ms.get("mask_sparsity", 0.0)) / 1e9,
+        }
 
     if host_loop:
+        refresh = 1 if schedule is None else max(1, schedule.refresh_every)
         for it in range(iterations):
+            if plans and it % refresh == 0:
+                plans = _encode_plans(params, cfg)
             key, k = jax.random.split(key)
+            t0 = time.perf_counter()
             params, opt_state, metrics = train_step(
-                params, opt_state, k, cfg, ecfg, tcfg, env, schedule, it)
-            history.append({k2: float(v) for k2, v in metrics.items()})
+                params, opt_state, k, cfg, ecfg, tcfg, env, schedule, it,
+                plans)
+            ms = {k2: float(v) for k2, v in metrics.items()}
+            ms.update(throughput(ms, 1, time.perf_counter() - t0))
+            history.append(ms)
             if log_every and it % log_every == 0:
                 print(f"iter {it:5d} success {history[-1]['success']:.3f} "
                       f"return {history[-1]['return']:.3f}")
         return params, history
 
-    ndev = jax.local_device_count()
-    use_pmap = tcfg.parallel and ndev > 1
     if use_pmap:
         # replicate learner state; each device gets an independent key
         params = jax.device_put_replicated(params, jax.local_devices())
         opt_state = jax.device_put_replicated(opt_state, jax.local_devices())
+        plans = jax.device_put_replicated(plans, jax.local_devices())
         key = jax.vmap(jax.random.fold_in, (None, 0))(
             key, jnp.arange(ndev, dtype=jnp.uint32))
 
@@ -232,19 +316,24 @@ def train(cfg: ic3net.IC3NetConfig, ecfg=None, tcfg: TrainConfig = None,
     start = 0
     while start < iterations:
         n = min(window, iterations - start)
+        t0 = time.perf_counter()
         if use_pmap:
             starts = jnp.full((ndev,), start, jnp.int32)
-            params, opt_state, key, metrics = _train_chunk_pmap(
-                params, opt_state, key, starts, n, cfg, ecfg, tcfg, env,
-                schedule)
+            params, opt_state, key, plans, metrics = _train_chunk_pmap(
+                params, opt_state, key, plans, starts, n, cfg, ecfg, tcfg,
+                env, schedule)
             metrics = jax.tree.map(lambda m: m[0], metrics)  # replicated
         else:
-            params, opt_state, key, metrics = _train_chunk(
-                params, opt_state, key, jnp.asarray(start, jnp.int32), n,
+            params, opt_state, key, plans, metrics = _train_chunk(
+                params, opt_state, key, plans,
+                jnp.asarray(start, jnp.int32), n,
                 cfg, ecfg, tcfg, env, schedule)
         fetched = {k2: np.asarray(v) for k2, v in metrics.items()}  # 1 sync
+        dt = time.perf_counter() - t0
         for i in range(n):
-            history.append({k2: float(v[i]) for k2, v in fetched.items()})
+            ms = {k2: float(v[i]) for k2, v in fetched.items()}
+            ms.update(throughput(ms, n, dt))
+            history.append(ms)
         if log_every:
             print(f"iter {start:5d} success {history[start]['success']:.3f} "
                   f"return {history[start]['return']:.3f}")

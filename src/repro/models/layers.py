@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.flgw import FLGWConfig, init_grouping, mask_ste
-from repro.core.grouped import grouped_apply
+from repro.core.grouped import GroupPlan, grouped_apply
 from repro.sharding.partition import constrain
 
 
@@ -43,14 +43,20 @@ def dense_init(key, m: int, n: int, *, flgw: Optional[FLGWConfig] = None,
 
 
 def proj(p: dict, x: jax.Array, flgw: Optional[FLGWConfig] = None,
-         *, transpose: bool = False) -> jax.Array:
-    """y = x @ W (or x @ W^T), FLGW-masked when grouping params exist."""
+         *, transpose: bool = False,
+         plan: Optional[GroupPlan] = None) -> jax.Array:
+    """y = x @ W (or x @ W^T), FLGW-masked when grouping params exist.
+
+    ``plan`` is this layer's cached sparse metadata for the grouped path
+    (one entry of an ``encode_plans`` PlanState); ``None`` falls back to
+    re-encoding inside the projection — correct but unamortized.
+    """
     w = p["w"]
     if flgw is None or not flgw.enabled or "ig" not in p:
         return x @ (w.T if transpose else w)
     if flgw.path == "grouped":
         return grouped_apply(x, w, p["ig"], p["og"], flgw,
-                             transpose=transpose)
+                             transpose=transpose, plan=plan)
     mask = mask_ste(p["ig"], p["og"], flgw.ste_temperature).astype(w.dtype)
     wm = w * mask
     return x @ (wm.T if transpose else wm)
@@ -124,11 +130,20 @@ def mlp_init(key, d: int, ff: int, *, gated: bool = True,
     return params, specs
 
 
-def mlp(p: dict, x: jax.Array, flgw: Optional[FLGWConfig] = None) -> jax.Array:
-    up = proj(p["up"], x, flgw)
+def plan_of(plans: Optional[dict], name: str) -> Optional[GroupPlan]:
+    """Look one layer's GroupPlan out of a PlanState (None when absent)."""
+    if not plans:
+        return None
+    return plans.get(name)
+
+
+def mlp(p: dict, x: jax.Array, flgw: Optional[FLGWConfig] = None,
+        plans: Optional[dict] = None) -> jax.Array:
+    up = proj(p["up"], x, flgw, plan=plan_of(plans, "up"))
     if "gate" in p:
-        up = jax.nn.gelu(proj(p["gate"], x, flgw)) * up
+        up = jax.nn.gelu(proj(p["gate"], x, flgw,
+                              plan=plan_of(plans, "gate"))) * up
     else:
         up = jax.nn.gelu(up)
     up = constrain(up, ("batch", None, "ffn"))   # TP on the hidden dim
-    return proj(p["down"], up, flgw)
+    return proj(p["down"], up, flgw, plan=plan_of(plans, "down"))

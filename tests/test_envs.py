@@ -21,7 +21,8 @@ from repro.marl.envs import predator_prey, spread, traffic_junction
 # ---------------------------------------------------------------------------
 
 def test_registry_lists_all_bundled_envs():
-    assert envs.names() == ["predator_prey", "spread", "traffic_junction"]
+    assert envs.names() == ["predator_prey", "spread", "traffic_junction",
+                            "traffic_junction_hard"]
 
 
 def test_registry_unknown_env_raises_with_candidates():
@@ -37,7 +38,7 @@ def test_make_applies_config_overrides():
 
 def test_env_records_are_hashable_static_args():
     # the training engine passes Env through jit as a static argument
-    assert len({envs.get(n) for n in envs.names()}) == 3
+    assert len({envs.get(n) for n in envs.names()}) == len(envs.names())
 
 
 def test_legacy_env_module_is_predator_prey():
@@ -184,6 +185,32 @@ def test_tj_all_brake_policy_is_not_a_success():
     assert bool(done)
     assert not bool(state.collided)
     assert not bool(traffic_junction.success(state))
+
+
+def test_tj_hard_arrivals_are_denser_and_entries_feasible():
+    """Hard variant: Geometric(p_arrive) arrival stream — entry times are
+    strictly increasing, start at 0, and every car can still clear the grid
+    before max_steps; higher p_arrive must not *spread out* the entries
+    relative to the easy one-per-step staggering."""
+    cfg = traffic_junction.HardConfig(n_agents=8, p_arrive=0.9)
+    state = traffic_junction.reset_hard(jax.random.PRNGKey(0), cfg)
+    enter = np.asarray(state.enter_t)
+    assert enter[0] == 0
+    assert (np.diff(enter) >= 1).all()
+    assert enter.max() <= cfg.max_steps - cfg.size - 1
+    # p→1 degenerates to the easy env's one-car-per-step staggering
+    dense = traffic_junction.reset_hard(
+        jax.random.PRNGKey(0), cfg._replace(p_arrive=1.0))
+    np.testing.assert_array_equal(np.sort(np.asarray(dense.enter_t)),
+                                  np.arange(cfg.n_agents))
+    # low p_arrive: the feasibility squeeze must keep entries strictly
+    # increasing (shared entry steps would spawn unavoidable collisions)
+    for seed in range(8):
+        sparse = traffic_junction.reset_hard(
+            jax.random.PRNGKey(seed), cfg._replace(p_arrive=0.05))
+        e = np.asarray(sparse.enter_t)
+        assert (np.diff(e) >= 1).all(), e
+        assert e.max() <= cfg.max_steps - cfg.size - 1
 
 
 def test_tj_inactive_cars_get_zero_reward():

@@ -136,6 +136,138 @@ def test_sparsity_schedule_warmup_runs_dense_then_sparse():
     assert sched.groups_at(0) == 1 and sched.groups_at(3) == 4
     # grouping matrices exist and received updates after warmup
     assert "ig" in params["enc"]
+    # the sparsity metric must describe the compute that actually ran:
+    # 0 while the dense warmup branch executes, ~1-1/G afterwards
+    assert all(h["mask_sparsity"] == 0.0 for h in hist[:3])
+    assert all(h["mask_sparsity"] > 0.5 for h in hist[3:])
+
+
+def test_masked_vs_grouped_training_trajectories_close():
+    """The compact grouped path inside the scan must track the masked
+    (full-FLOPs numerical oracle) training run: same seed, same config ⇒
+    near-identical loss/success trajectories (small drift allowed — the
+    capacity-balanced layout spills a few rows, and dIG/dOG use the
+    sparse-restricted STE)."""
+    ecfg = env_mod.EnvConfig(n_agents=2, size=3, max_steps=6)
+    tcfg = train_mod.TrainConfig(batch=8)
+    hists = {}
+    for path in ("masked", "grouped"):
+        cfg = ic3net.IC3NetConfig(hidden=16, flgw_groups=2, flgw_path=path)
+        _, hists[path] = train_mod.train(cfg, ecfg, tcfg, iterations=8,
+                                         seed=0)
+    lm = np.array([h["loss"] for h in hists["masked"]])
+    lg = np.array([h["loss"] for h in hists["grouped"]])
+    np.testing.assert_allclose(lg, lm, rtol=0.5, atol=0.5)
+    sm = np.array([h["success"] for h in hists["masked"]])
+    sg = np.array([h["success"] for h in hists["grouped"]])
+    assert np.abs(sg - sm).max() <= 0.25
+
+
+def test_grouped_scan_loop_matches_host_loop():
+    """Plan-cache parity: the scan carry's refreshed plans must reproduce
+    the host loop's explicit refresh — same params and trajectories."""
+    from repro.core.schedule import SparsitySchedule
+    cfg = ic3net.IC3NetConfig(hidden=16, flgw_groups=4, flgw_path="grouped")
+    ecfg = env_mod.EnvConfig(n_agents=2, size=3, max_steps=6)
+    tcfg = train_mod.TrainConfig(batch=4)
+    sched = SparsitySchedule(groups=4, refresh_every=2)
+    p_host, h_host = train_mod.train(cfg, ecfg, tcfg, iterations=4, seed=0,
+                                     schedule=sched, host_loop=True)
+    p_scan, h_scan = train_mod.train(cfg, ecfg, tcfg, iterations=4, seed=0,
+                                     schedule=sched, log_every=2)
+    np.testing.assert_allclose([h["loss"] for h in h_host],
+                               [h["loss"] for h in h_scan], rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(p_host), jax.tree.leaves(p_scan)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_plan_refresh_reuses_stale_plans_until_boundary():
+    """refresh_every=k: iterations with it % k != 0 must pass the carried
+    (stale) plans through bit-identically; it % k == 0 must re-encode from
+    the current grouping matrices."""
+    from repro.core.schedule import SparsitySchedule
+    cfg = ic3net.IC3NetConfig(hidden=16, obs_dim=7, flgw_groups=4,
+                              flgw_path="grouped")
+    params, _ = ic3net.init(jax.random.PRNGKey(0), cfg)
+    fresh = ic3net.encode_plans(params, cfg)
+    # a deliberately wrong ("stale") cache: plans of different params
+    other, _ = ic3net.init(jax.random.PRNGKey(1), cfg)
+    stale = ic3net.encode_plans(other, cfg)
+    sched = SparsitySchedule(groups=4, refresh_every=3)
+    for it in range(7):
+        got = jax.jit(train_mod.maybe_refresh_plans,
+                      static_argnames=("cfg", "schedule"))(
+            params, stale, it, cfg=cfg, schedule=sched)
+        want = fresh if it % 3 == 0 else stale
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_grouped_stale_plans_actually_change_training():
+    """Amortization must be real: with a learning rate high enough to move
+    the grouping matrices, refresh_every=4 must diverge from refresh_every=1
+    (if plans were silently re-encoded per projection the two would match)."""
+    from repro.core.schedule import SparsitySchedule
+    cfg = ic3net.IC3NetConfig(hidden=16, flgw_groups=4, flgw_path="grouped")
+    ecfg = env_mod.EnvConfig(n_agents=2, size=3, max_steps=6)
+    tcfg = train_mod.TrainConfig(batch=4, lr=0.05)
+    losses = {}
+    for k in (1, 4):
+        sched = SparsitySchedule(groups=4, refresh_every=k)
+        _, hist = train_mod.train(cfg, ecfg, tcfg, iterations=6, seed=0,
+                                  schedule=sched)
+        losses[k] = np.array([h["loss"] for h in hist])
+        assert np.isfinite(losses[k]).all()
+    assert not np.allclose(losses[1], losses[4])
+
+
+def test_encode_happens_once_per_refresh_not_per_projection(monkeypatch):
+    """Regression guard for the OSEL amortization: tracing one training
+    chunk must hit make_plan exactly once per FLGW layer (inside the
+    refresh cond), independent of iterations/batch/rollout length — NOT
+    once per projection call (the plan=None fallback)."""
+    from repro.core import grouped
+    from repro.core.schedule import SparsitySchedule
+    calls = {"n": 0}
+    real = grouped.make_plan
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(grouped, "make_plan", counting)
+    cfg = ic3net.IC3NetConfig(hidden=16, flgw_groups=4, flgw_path="grouped")
+    ecfg = env_mod.EnvConfig(n_agents=2, size=3, max_steps=6)
+    tcfg = train_mod.TrainConfig(batch=3)
+    from repro.marl import envs
+    e = envs.get("predator_prey")
+    cfg2, key, params, opt_state = train_mod._init(cfg, ecfg, e, seed=0)
+    plans = ic3net.encode_plans(params, cfg2)
+    n_flgw_layers = len(plans)
+    assert n_flgw_layers == 5    # enc, lstm_x, lstm_h, comm, policy
+    calls["n"] = 0
+    # eager _scan_chunk: lax.scan traces the body exactly once
+    train_mod._scan_chunk(params, opt_state, key, plans,
+                          jnp.zeros((), jnp.int32), 4, cfg2, ecfg, tcfg, e,
+                          SparsitySchedule(groups=4, refresh_every=2))
+    assert calls["n"] == n_flgw_layers, calls["n"]
+
+
+def test_history_carries_throughput_and_sparsity_metrics():
+    """Per-iteration metrics from inside the scan: realised mask sparsity
+    plus host-derived steps/s and estimated sparse GFLOPS."""
+    cfg = ic3net.IC3NetConfig(hidden=16, flgw_groups=4)
+    ecfg = env_mod.EnvConfig(n_agents=2, size=3, max_steps=6)
+    _, hist = train_mod.train(cfg, ecfg, train_mod.TrainConfig(batch=2),
+                              iterations=3, seed=0)
+    for h in hist:
+        assert 0.0 <= h["mask_sparsity"] < 1.0
+        assert h["steps_per_s"] > 0
+        assert h["env_steps_per_s"] == pytest.approx(
+            h["steps_per_s"] * 2 * 6)
+        assert h["sparse_gflops"] > 0
+    # G=4 random grouping realises roughly 1 - 1/G sparsity
+    assert hist[0]["mask_sparsity"] == pytest.approx(0.75, abs=0.15)
 
 
 def test_pmap_data_parallel_path_runs():
