@@ -23,22 +23,28 @@ def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     return times[len(times) // 2]
 
 
-def timeit_interleaved(fns: dict, *args, reps: int = 12) -> dict:
-    """Min wall seconds per call for several jit'd fns measured round-robin.
+def timeit_interleaved(fns: dict, *args, reps: int = 12,
+                       stat: str = "min") -> dict:
+    """Wall seconds per call for several jit'd fns measured round-robin.
 
     Interleaving makes slow drifts in machine load hit every variant
-    equally, and min (unlike median) is robust to load spikes — use this
-    when *comparing* variants on a shared host.
+    equally. ``stat="min"`` is robust to isolated load spikes;
+    ``stat="median"`` is the better estimator when the host baseline
+    wanders (min draws are heavy-tailed-lucky, so small structural gaps
+    between variants flap under min). Use this when *comparing* variants
+    on a shared host.
     """
     for fn in fns.values():
         jax.block_until_ready(fn(*args))        # compile + warm
-    best = {name: float("inf") for name in fns}
+    times = {name: [] for name in fns}
     for _ in range(reps):
         for name, fn in fns.items():
             t0 = time.perf_counter()
             jax.block_until_ready(fn(*args))
-            best[name] = min(best[name], time.perf_counter() - t0)
-    return best
+            times[name].append(time.perf_counter() - t0)
+    if stat == "min":
+        return {name: min(ts) for name, ts in times.items()}
+    return {name: sorted(ts)[len(ts) // 2] for name, ts in times.items()}
 
 
 def save(name: str, payload) -> pathlib.Path:

@@ -7,24 +7,46 @@ baseline on a 128×512 mask, G ∈ {2, 4, 8, 16, 32}.
 Paper targets: up to 5.72× cycle reduction, 1.95–6.81× memory compression.
 Also times the *vectorized TPU-path* encoder (jit on this host) to show the
 index-compare encode is microseconds — the overhead the paper hides
-on-chip stays hidden on TPU.
+on-chip stays hidden on TPU — and *measures* the full plan encode
+(``make_plan``) both ways: the old lexsort/searchsorted idiom (generic XLA
+ops outside any kernel) vs the ``plan_encode`` Pallas kernel, interleaved
+(`timeit_interleaved`) so host timing drift hits both variants equally.
+On a CPU host the kernel runs in interpret mode, so treat the columns as a
+structural comparison there; on TPU they are the real device encode.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import row, save, timeit
+from benchmarks.common import row, save, timeit, timeit_interleaved
+from repro import kernels as kernels_mod
+from repro.core.grouped import make_plan
 from repro.core.osel import cycle_model, encode, footprint_model
 
 M, N = 128, 512
+
+
+def _plan_timers(ig, og):
+    """Two compiled make_plan variants: lexsort reference vs Pallas encode.
+
+    The impl is baked at trace time (the shared reference-impl switch), so
+    each closure is traced under its mode once and then timed round-robin.
+    """
+    lex = jax.jit(lambda a, b: make_plan(a, b))
+    with kernels_mod.use_reference_impl():
+        jax.block_until_ready(lex(ig, og))       # trace with the lexsort
+    ker = jax.jit(lambda a, b: make_plan(a, b))
+    jax.block_until_ready(ker(ig, og))           # trace with the kernel
+    return {"lexsort": lex, "pallas": ker}
 
 
 def main() -> dict:
     out = {"cells": []}
     row("# fig10_osel: mask", f"{M}x{N}")
     row("G", "base_cycles", "osel_cycles", "cycle_speedup",
-        "dense_bytes", "osel_bytes", "mem_compression", "encode_us")
+        "dense_bytes", "osel_bytes", "mem_compression", "encode_us",
+        "plan_lexsort_us", "plan_pallas_us")
     best_cyc, best_mem = 0.0, 0.0
     for g in (2, 4, 8, 16, 32):
         base = cycle_model(M, N, g, use_osel=False)
@@ -42,15 +64,23 @@ def main() -> dict:
         enc = jax.jit(lambda a, b, g=g: encode(a, b, g))
         us = timeit(enc, ig_idx, og_idx) * 1e6
 
+        # measured device encode: full make_plan, lexsort vs Pallas
+        ig = jax.random.normal(jax.random.fold_in(key, 2), (M, g))
+        og = jax.random.normal(jax.random.fold_in(key, 3), (g, N))
+        best = timeit_interleaved(_plan_timers(ig, og), ig, og)
+        lex_us, ker_us = best["lexsort"] * 1e6, best["pallas"] * 1e6
+
         row(g, base["total"], osel["total"], f"{cyc:.2f}",
             dense["total"], int(sparse["total"]), f"{mem:.2f}",
-            f"{us:.1f}")
+            f"{us:.1f}", f"{lex_us:.1f}", f"{ker_us:.1f}")
         out["cells"].append({
             "G": g, "base_cycles": base["total"],
             "osel_cycles": osel["total"], "cycle_speedup": cyc,
             "osel_breakdown": osel, "mem_dense": dense["total"],
             "mem_osel": sparse["total"], "mem_compression": mem,
-            "mem_breakdown": sparse, "tpu_encode_us": us})
+            "mem_breakdown": sparse, "tpu_encode_us": us,
+            "plan_lexsort_us": lex_us, "plan_pallas_us": ker_us,
+            "plan_encode_interpret": jax.default_backend() != "tpu"})
     out["max_cycle_speedup"] = best_cyc
     out["max_mem_compression"] = best_mem
     row("# paper: cycles up to 5.72x, memory 1.95-6.81x; measured:",

@@ -21,6 +21,11 @@ def main(argv=None):
     ap.add_argument("--groups", type=int, default=1)
     ap.add_argument("--path", default="masked",
                     choices=("masked", "grouped"))
+    ap.add_argument("--refresh", type=int, default=1,
+                    help="re-encode the grouped plan cache every k steps")
+    ap.add_argument("--refresh-mode", default="period",
+                    choices=("period", "on_change", "hybrid"),
+                    help="plan-refresh policy (repro.core.encoder)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
     ap.add_argument("--full", action="store_true",
                     help="full published config (TPU-scale)")
@@ -28,7 +33,8 @@ def main(argv=None):
 
     train_lm(args.arch, smoke=not args.full, steps=args.steps,
              batch=args.batch, seq=args.seq, flgw_groups=args.groups,
-             flgw_path=args.path, ckpt_dir=args.ckpt_dir,
+             flgw_path=args.path, refresh_every=args.refresh,
+             refresh=args.refresh_mode, ckpt_dir=args.ckpt_dir,
              save_every=max(10, args.steps // 4),
              log_every=max(1, args.steps // 20))
 

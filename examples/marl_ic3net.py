@@ -42,6 +42,11 @@ def main(argv=None):
     ap.add_argument("--refresh", type=int, default=1,
                     help="re-encode the grouped path's plan cache every k "
                          "iterations (OSEL amortization; 1 = every step)")
+    ap.add_argument("--refresh-mode", default="period",
+                    choices=("period", "on_change", "hybrid"),
+                    help="plan-refresh policy: fixed period, or "
+                         "change-driven from the ig/og argmax hash "
+                         "(repro.core.encoder)")
     ap.add_argument("--parallel", action="store_true",
                     help="pmap the env batch over local devices")
     ap.add_argument("--host-loop", action="store_true",
@@ -56,8 +61,10 @@ def main(argv=None):
     tcfg = train_mod.TrainConfig(batch=args.batch, parallel=args.parallel)
     schedule = SparsitySchedule(groups=args.groups,
                                 warmup_steps=args.warmup,
-                                refresh_every=args.refresh) \
-        if (args.warmup or args.refresh > 1) else None
+                                refresh_every=args.refresh,
+                                refresh=args.refresh_mode) \
+        if (args.warmup or args.refresh > 1
+            or args.refresh_mode != "period") else None
     print(f"IC3Net on {args.env} A={args.agents} hidden={args.hidden} "
           f"FLGW G={args.groups} ({args.path}) "
           f"-> expected sparsity {100 * (1 - 1 / max(args.groups, 1)):.1f}%"

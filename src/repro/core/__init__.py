@@ -4,7 +4,9 @@ from repro.core.flgw import (  # noqa: F401
     mask_ste, flgw_linear, mask_sparsity, selection_matrices,
 )
 from repro.core.grouped import (  # noqa: F401
-    GroupPlan, PlanState, balanced_assign, make_plan, transpose_plan,
-    encode_plans, grouped_apply,
+    GroupPlan, balanced_assign, make_plan, transpose_plan, grouped_apply,
+)
+from repro.core.encoder import (  # noqa: F401
+    PlanState, encode_plans, maybe_refresh, plan_signature,
 )
 from repro.core import osel  # noqa: F401

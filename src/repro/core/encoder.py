@@ -1,0 +1,134 @@
+"""Device-resident plan-encoder subsystem — one OSEL analogue for all stacks.
+
+The paper's OSEL encodes the FLGW mask *once per iteration* into compact
+sparse metadata the whole step reuses (§III-B). This module is that
+encoder as a first-class subsystem shared by every workload (the MARL
+engine and the LM/transformer stack), instead of per-caller helpers:
+
+* :class:`PlanState` — the cached metadata: one :class:`~repro.core.grouped.
+  GroupPlan` per FLGW-carrying projection (nested dict mirroring the param
+  tree; stacked/scanned layers get stacked plans) plus a ``sig`` hash of
+  the ig/og argmaxes the plans were encoded from.
+* :func:`encode_plans` — one encoding pass over any param tree. The
+  balanced assignment itself runs on the ``plan_encode`` Pallas kernel
+  (``repro.kernels.plan_encode``).
+* :func:`maybe_refresh` — the refresh policy, usable under trace
+  (``lax.cond`` inside) and from host loops alike:
+
+  - ``"period"``    — re-encode every ``schedule.refresh_every`` steps
+    (the PR-2 behavior; the paper's once-per-iteration encode at k=1);
+  - ``"on_change"`` — re-encode only when an ig/og argmax actually flipped
+    (detected via ``sig``). The paper's masks churn early and freeze late,
+    so change-driven refresh matches per-step re-encoding exactly while
+    masks move and costs one cheap hash once they freeze;
+  - ``"hybrid"``    — on change, with ``refresh_every`` as a staleness
+    bound (covers spill-order drift: the balanced layout's overflow order
+    depends on preference *strengths*, which can move without flipping an
+    argmax).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import grouped
+
+REFRESH_MODES = ("period", "on_change", "hybrid")
+
+_MIX = 2654435761        # Knuth's multiplicative-hash constant (odd)
+_FOLD = 1000003          # layer-fold multiplier (odd)
+
+
+class PlanState(NamedTuple):
+    """Cached sparse metadata of a param tree + the hash it was built from.
+
+    ``plans`` mirrors the params nesting with a GroupPlan at every
+    FLGW-carrying projection (``{}`` when the grouped path is off — the
+    empty state keeps training-loop carries structurally uniform).
+    ``sig`` is a uint32 hash of the ig/og argmaxes (:func:`plan_signature`):
+    any single argmax flip changes it, so ``sig`` equality certifies the
+    cached plans still describe the current mask's group structure.
+    """
+    plans: Any
+    sig: jax.Array
+
+    def __bool__(self) -> bool:           # truthiness == "has any plans"
+        return bool(self.plans)
+
+
+def empty_state() -> PlanState:
+    return PlanState({}, jnp.zeros((), jnp.uint32))
+
+
+def plan_signature(params: dict) -> jax.Array:
+    """uint32 hash of every FLGW layer's ig/og argmax index vectors.
+
+    Each index gets an odd per-position weight and layers fold with an odd
+    multiplier, so flipping any single argmax always changes the hash
+    (odd · nonzero ≠ 0 mod 2^32); simultaneous multi-flip cancellation is
+    the only collision mode and is vanishingly unlikely.
+    """
+    h = jnp.zeros((), jnp.uint32)
+    salt = 1
+    for _, p in grouped.iter_flgw_layers(params):
+        for idx in (jnp.argmax(p["ig"], axis=-1),
+                    jnp.argmax(p["og"], axis=-2)):
+            v = idx.astype(jnp.uint32).reshape(-1)
+            w = (jnp.arange(v.shape[0], dtype=jnp.uint32)
+                 * jnp.uint32(_MIX) + jnp.uint32(salt)) | jnp.uint32(1)
+            h = h * jnp.uint32(_FOLD) + jnp.sum((v + jnp.uint32(1)) * w)
+            salt += 2
+    return h
+
+
+def encode_plans(params: dict, cfg) -> PlanState:
+    """One encoding pass over a param tree — plans + their signature.
+
+    ``cfg`` is the layer's :class:`~repro.core.flgw.FLGWConfig` (anything
+    with ``capacity_slack``). Handles flat trees (MARL/IC3Net) and stacked
+    scan-layer trees (the LM decoder) alike — see
+    :func:`repro.core.grouped.encode_plans` for the per-layer walk.
+    """
+    return PlanState(grouped.encode_plans(params, cfg),
+                     plan_signature(params))
+
+
+def maybe_refresh(params: dict, state: PlanState, it, cfg,
+                  schedule=None) -> PlanState:
+    """Re-encode ``state`` from the current grouping matrices when due.
+
+    ``it`` may be a traced int32 (``lax.cond`` inside) — the same function
+    serves the on-device ``lax.scan`` carry, the pmap path and the host
+    loop mirror. ``schedule`` is a ``SparsitySchedule`` (or None: refresh
+    every step); its ``refresh`` field picks the policy. Empty states pass
+    through untouched. ``state`` must be a :class:`PlanState` — a raw
+    plans dict has no signature to compare, so the change-driven modes
+    could never fire on one (wrap it via :func:`encode_plans` instead).
+    """
+    if not isinstance(state, PlanState):
+        raise TypeError(
+            f"maybe_refresh needs a PlanState, got {type(state).__name__}; "
+            "build one with encoder.encode_plans")
+    if not state.plans:
+        return state
+    mode = "period" if schedule is None else \
+        getattr(schedule, "refresh", "period")
+    if mode not in REFRESH_MODES:
+        raise ValueError(f"unknown refresh mode {mode!r}")
+    k = 1 if schedule is None else max(1, schedule.refresh_every)
+    if mode == "period" and k == 1:
+        return encode_plans(params, cfg)
+    due = jnp.asarray(it, jnp.int32) % k == 0
+    if mode == "period":
+        pred = due
+    else:
+        changed = plan_signature(params) != state.sig
+        pred = changed if mode == "on_change" else changed | due
+    return jax.lax.cond(pred, lambda: encode_plans(params, cfg),
+                        lambda: state)
+
+
+# re-export: the single source of truth for walking FLGW structure
+iter_flgw_layers = grouped.iter_flgw_layers

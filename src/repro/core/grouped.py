@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.flgw_matmul import ops as kops
+from repro.kernels.plan_encode import ops as pe_ops
 from repro.sharding.partition import constrain
 
 
@@ -49,8 +50,9 @@ def balanced_assign(scores: jax.Array, axis: int,
                     slack: float = 1.0) -> jax.Array:
     """Deal items into equal-capacity groups by argmax preference.
 
-    ``scores``: (M, G) if axis==1 (rows of IG) or (G, N) if axis==0
-    (columns of OG). Returns (G, cap) int32 item indices with
+    ``scores``: (..., M, G) if axis==1 (rows of IG) or (..., G, N) if
+    axis==0 (columns of OG); leading dims batch over stacked layers.
+    Returns (..., G, cap) int32 item indices with
     ``cap = ceil(M/G · slack)``.
 
     Items keep their argmax group as long as it has a free slot (the
@@ -58,58 +60,51 @@ def balanced_assign(scores: jax.Array, axis: int,
     capacity-factor trade); only true overflow items — the *least*
     confident ones of an over-popular group — spill into other groups'
     free slots. ``slack == 1.0`` reproduces the strict equal-deal.
+
+    Runs on the ``plan_encode`` Pallas kernel (comparator-rank counting
+    sort; the lexsort reference is preserved in
+    ``repro.kernels.plan_encode.ref`` and used under reference-impl mode).
     """
-    if axis == 0:
-        scores = scores.T                      # (N, G)
-    m, g = scores.shape
-    cap = max(1, -(-m // g))
-    cap = min(m, int(-(-cap * slack // 1))) if slack > 1.0 else cap
-    total = g * cap
-    pref = jnp.argmax(scores, axis=1)          # (M,)
-    strength = jnp.max(scores, axis=1)
-    # Sort by (pref asc, strength desc): within a group, confident items
-    # first, so spill-over moves the *least* confident items.
-    order = jnp.lexsort((-strength, pref))     # (M,)
-    pref_sorted = pref[order]
-    first = jnp.searchsorted(pref_sorted, jnp.arange(g))     # group starts
-    rank = jnp.arange(m) - first[pref_sorted]                # rank in group
-    keep = rank < cap
-    kept_slot = pref_sorted * cap + jnp.minimum(rank, cap - 1)
-    # Free slots: slot (gi, r) is free iff r >= (kept count of gi).
-    counts = jnp.minimum(jnp.bincount(pref, length=g), cap)
-    sidx = jnp.arange(total)
-    free = (sidx % cap) >= counts[sidx // cap]
-    free_slots = jnp.argsort(~free, stable=True)   # free slot ids, ascending
-    ovf_rank = jnp.cumsum(~keep) - 1
-    slot = jnp.where(keep, kept_slot,
-                     free_slots[jnp.clip(ovf_rank, 0, total - 1)])
-    row_of_slot = (jnp.full((total,), m, jnp.int32)
-                   .at[slot].set(order.astype(jnp.int32), mode="drop"))
-    return row_of_slot.reshape(g, cap)
+    return pe_ops.balanced_assign(scores, axis, slack)
+
+
+def _group_of_item(ids: jax.Array, size: int) -> jax.Array:
+    """(..., G, cap) item ids -> (..., size) group of each item (inverse
+    lookup via scatter; padded slots were clipped into range upstream)."""
+    lead = ids.shape[:-2]
+    g = ids.shape[-2]
+    gid = jnp.broadcast_to(
+        jnp.arange(g, dtype=jnp.int32)[:, None], ids.shape[-2:]).reshape(-1)
+    if not lead:
+        return (jnp.zeros((size,), jnp.int32)
+                .at[ids.reshape(-1)].set(gid, mode="drop"))
+    length = int(np.prod(lead))
+    flat = ids.reshape(length, -1)
+    out = (jnp.zeros((length, size), jnp.int32)
+           .at[jnp.arange(length)[:, None], flat]
+           .set(jnp.broadcast_to(gid[None], flat.shape), mode="drop"))
+    return out.reshape(*lead, size)
 
 
 def make_plan(ig: jax.Array, og: jax.Array,
               slack: float = 1.0) -> GroupPlan:
-    """Build the compact layout from the grouping matrices."""
-    m, g = ig.shape
-    n = og.shape[1]
-    row_ids = balanced_assign(ig, axis=1, slack=slack)   # (G, capM)
-    col_ids = balanced_assign(og, axis=0, slack=slack)   # (G, capN)
+    """Build the compact layout from the grouping matrices.
+
+    ``ig``: (..., M, G), ``og``: (..., G, N) — leading dims (the stacked
+    scan-layer axis of the LM decoder) batch through the plan-encode
+    kernel's grid in one launch; every GroupPlan leaf comes back with the
+    same leading dims.
+    """
+    m = ig.shape[-2]
+    n = og.shape[-1]
+    row_ids = balanced_assign(ig, axis=1, slack=slack)   # (..., G, capM)
+    col_ids = balanced_assign(og, axis=0, slack=slack)   # (..., G, capN)
     row_valid = row_ids < m
     col_valid = col_ids < n
     row_ids = jnp.minimum(row_ids, m - 1)
     col_ids = jnp.minimum(col_ids, n - 1)
-    gid = jnp.arange(g, dtype=jnp.int32)
-    row_group = (jnp.zeros((m,), jnp.int32)
-                 .at[row_ids.reshape(-1)]
-                 .set(jnp.broadcast_to(gid[:, None], row_ids.shape)
-                      .reshape(-1), mode="drop"))
-    col_group = (jnp.zeros((n,), jnp.int32)
-                 .at[col_ids.reshape(-1)]
-                 .set(jnp.broadcast_to(gid[:, None], col_ids.shape)
-                      .reshape(-1), mode="drop"))
     return GroupPlan(row_ids, col_ids, row_valid, col_valid,
-                     row_group, col_group)
+                     _group_of_item(row_ids, m), _group_of_item(col_ids, n))
 
 
 def transpose_plan(plan: GroupPlan) -> GroupPlan:
@@ -126,19 +121,25 @@ def transpose_plan(plan: GroupPlan) -> GroupPlan:
 
 
 # ---------------------------------------------------------------------------
-# PlanState: one GroupPlan per FLGW layer of a param tree (OSEL analogue)
+# RawPlans: one GroupPlan per FLGW layer of a param tree (OSEL analogue)
 # ---------------------------------------------------------------------------
 
-# A PlanState mirrors a params pytree: nested dict whose leaves are the
+# RawPlans mirrors a params pytree: nested dict whose leaves are the
 # GroupPlan of every projection dict carrying ig/og grouping matrices.
-PlanState = dict[str, Any]
+# (repro.core.encoder.PlanState wraps this dict with the argmax signature
+# used for change-driven refresh — that is the type most callers handle.)
+RawPlans = dict[str, Any]
 
 
 def iter_flgw_layers(params: dict, _path=()):
     """Yield ``(path, layer_dict)`` for every FLGW-carrying projection —
     any nested dict holding ``ig``/``og`` grouping matrices. The single
-    source of truth for walking a param tree's FLGW structure."""
-    for name, p in params.items():
+    source of truth for walking a param tree's FLGW structure.
+
+    Iterates in sorted key order — the same canonical order jit's pytree
+    flattening gives dicts — so order-sensitive consumers (the plan
+    signature's per-layer salts) agree between eager and traced calls."""
+    for name, p in sorted(params.items()):
         if not isinstance(p, dict):
             continue
         if "ig" in p:
@@ -147,7 +148,7 @@ def iter_flgw_layers(params: dict, _path=()):
             yield from iter_flgw_layers(p, (*_path, name))
 
 
-def encode_plans(params: dict, cfg) -> PlanState:
+def encode_plans(params: dict, cfg) -> RawPlans:
     """One encoding pass over a param tree — the OSEL loop's TPU analogue.
 
     The paper encodes the FLGW mask *once per iteration* into compact
@@ -155,9 +156,15 @@ def encode_plans(params: dict, cfg) -> PlanState:
     Here that metadata is the capacity-balanced :class:`GroupPlan`; this
     builds one per FLGW-carrying projection so callers can cache and
     re-encode it on their own schedule instead of re-deriving it inside
-    every projection. The PlanState mirrors the params nesting.
+    every projection. The dict mirrors the params nesting; stacked
+    (scanned) layers encode in one batched kernel launch and get plans
+    stacked along the same leading axes.
+
+    This returns the raw plans dict; most callers want
+    :func:`repro.core.encoder.encode_plans`, which pairs it with the
+    argmax signature used for change-driven refresh.
     """
-    plans: PlanState = {}
+    plans: RawPlans = {}
     for path, p in iter_flgw_layers(params):
         node = plans
         for name in path[:-1]:

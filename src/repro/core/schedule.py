@@ -10,11 +10,26 @@ from __future__ import annotations
 import dataclasses
 
 
+REFRESH_MODES = ("period", "on_change", "hybrid")
+
+
 @dataclasses.dataclass(frozen=True)
 class SparsitySchedule:
     groups: int = 1
     refresh_every: int = 1        # re-derive the mask/plan every k steps
     warmup_steps: int = 0         # run dense for the first k steps
+    # Plan-refresh policy (consumed by repro.core.encoder.maybe_refresh):
+    #   "period"    — every refresh_every steps (fixed amortization)
+    #   "on_change" — only when an ig/og argmax flips (hash-driven; matches
+    #                 the paper's churn-early / freeze-late mask dynamics)
+    #   "hybrid"    — on change, with refresh_every as a staleness bound
+    refresh: str = "period"
+
+    def __post_init__(self):
+        if self.refresh not in REFRESH_MODES:
+            raise ValueError(
+                f"refresh must be one of {REFRESH_MODES}, "
+                f"got {self.refresh!r}")
 
     def groups_at(self, step: int) -> int:
         return 1 if step < self.warmup_steps else self.groups
@@ -25,6 +40,8 @@ class SparsitySchedule:
         return step >= self.warmup_steps
 
     def refresh_at(self, step: int) -> bool:
+        """Fixed-period refresh predicate (``"period"`` mode only; the
+        change-driven modes decide on device from the plan signature)."""
         return step % max(1, self.refresh_every) == 0
 
     @property

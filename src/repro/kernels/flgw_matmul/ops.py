@@ -25,19 +25,9 @@ from repro.kernels.flgw_matmul import ref as _ref
 # gemma2-2b dry-run measured 28x compute). On real TPUs the kernel is
 # invoked under shard_map on local blocks; for the CPU dry-run we lower the
 # mathematically identical jnp reference instead, which GSPMD shards like
-# any einsum. The launcher enables this via ``use_reference_impl()``.
-import contextlib as _contextlib
-
-_REF_MODE: list = []
-
-
-@_contextlib.contextmanager
-def use_reference_impl():
-    _REF_MODE.append(True)
-    try:
-        yield
-    finally:
-        _REF_MODE.pop()
+# any einsum. The switch now lives in ``repro.kernels`` (shared with the
+# plan_encode kernel); these aliases keep existing callers working.
+from repro.kernels import _REF_MODE, use_reference_impl  # noqa: F401
 
 
 def _round_up(x: int, m: int) -> int:

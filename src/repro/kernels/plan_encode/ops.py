@@ -1,0 +1,108 @@
+"""Jit'd public wrapper around the plan-encode (balanced-assign) kernel.
+
+Pipeline (the TPU analogue of the FPGA's load-allocation unit):
+
+  1. argmax    scores -> (pref, strength)   per-item group preference (VPU)
+  2. Pallas    comparator-rank counting sort + prefix-sum placement
+  3. scatter   slot_of_item -> (G, cap) buckets (inverse permutation, XLA)
+
+Leading batch dims are folded into the kernel grid (stacked decoder layers
+encode in one launch — no vmap-of-pallas needed). On non-TPU backends the
+kernel runs in interpret mode; ``impl="reference"`` (or the shared
+``repro.kernels.use_reference_impl`` switch, for GSPMD lowering) and
+oversized inputs fall back to the lexsort reference in ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import reference_impl_active
+from repro.kernels.plan_encode import ref as _ref
+from repro.kernels.plan_encode.plan_encode import assign_slots
+
+# Above this item count the (Mp, bj) comparator tiles outgrow VMEM; the
+# encode is off the hot path, so just use the XLA reference there.
+_MAX_ITEMS = 4096
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("axis", "slack", "interpret", "impl"))
+def _balanced_assign(scores: jax.Array, axis: int, slack: float,
+                     interpret: bool | None, impl: str) -> jax.Array:
+    # The assignment is pure int metadata — no gradient ever flows through
+    # it (the STE surrogate lives in grouped_apply's VJP). Cutting the
+    # tangent here keeps jvp/grad of plan-deriving callers from trying to
+    # differentiate the Pallas call.
+    scores = jax.lax.stop_gradient(scores)
+    if axis == 0:
+        scores = jnp.swapaxes(scores, -1, -2)
+    lead = scores.shape[:-2]
+    m, g = scores.shape[-2:]
+    cap = _ref.compute_cap(m, g, slack)
+    if impl == "reference" or m > _MAX_ITEMS:
+        f = functools.partial(_ref.ref_balanced_assign, slack=slack)
+        for _ in lead:
+            f = jax.vmap(f)
+        return f(scores)
+    if interpret is None:
+        interpret = default_interpret()
+
+    flat = scores.reshape((-1, m, g)) if lead else scores[None]
+    length = flat.shape[0]
+    pref = jnp.argmax(flat, axis=-1).astype(jnp.int32)       # (L, M)
+    strength = jnp.max(flat, axis=-1).astype(jnp.float32)
+    bj = min(256, _round_up(m, 128))
+    mp = _round_up(m, bj)
+    # Padding items: sentinel group g, -inf strength — never counted, never
+    # placed (their garbage slots are sliced off below).
+    pref = jnp.pad(pref, ((0, 0), (0, mp - m)), constant_values=g)
+    strength = jnp.pad(strength, ((0, 0), (0, mp - m)),
+                       constant_values=-jnp.inf)
+    slot = assign_slots(pref[..., None], strength[..., None],
+                        pref[:, None, :], strength[:, None, :],
+                        g=g, cap=cap, bj=bj, interpret=interpret)
+    slot = slot[:, :m, 0]                                    # (L, M)
+
+    # Inverse permutation: bucket slot ids back to (G, cap) item lists.
+    total = g * cap
+    ids = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32)[None],
+                           (length, m))
+    out = (jnp.full((length, total), m, jnp.int32)
+           .at[jnp.arange(length)[:, None], slot].set(ids, mode="drop"))
+    if lead:
+        return out.reshape(*lead, g, cap)
+    return out[0].reshape(g, cap)
+
+
+def balanced_assign(scores: jax.Array, axis: int, slack: float = 1.0, *,
+                    interpret: bool | None = None,
+                    impl: str | None = None) -> jax.Array:
+    """Deal items into equal-capacity groups by argmax preference.
+
+    ``scores``: (..., M, G) if axis==1 (rows of IG) or (..., G, N) if
+    axis==0 (columns of OG); leading dims batch over stacked layers.
+    Returns (..., G, cap) int32 item ids with ``cap = ceil(M/G · slack)``
+    (padding slots hold M). Bitwise-identical to
+    :func:`ref.ref_balanced_assign` for finite scores.
+    """
+    if impl is None:
+        impl = "reference" if reference_impl_active() else "pallas"
+    return _balanced_assign(scores, axis, slack, interpret, impl)
+
+
+def reference(scores: jax.Array, axis: int, slack: float = 1.0) -> jax.Array:
+    """The lexsort oracle (unbatched input)."""
+    if axis == 0:
+        scores = scores.T
+    return _ref.ref_balanced_assign(scores, slack)

@@ -1,0 +1,52 @@
+"""Oracle for the plan-encode kernel: the lexsort capacity-balanced deal.
+
+This is the original host-shaped idiom the kernel replaces — a global
+``jnp.lexsort`` over (group preference, confidence) followed by
+``searchsorted`` bucketing. It remains the semantic ground truth: the
+Pallas kernel must place every item in the *bitwise identical* slot,
+including the spill order of overflow items under ``slack > 1``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compute_cap(m: int, g: int, slack: float = 1.0) -> int:
+    """Static per-group capacity: ``ceil(m/g)``, stretched by ``slack``."""
+    cap = max(1, -(-m // g))
+    return min(m, int(-(-cap * slack // 1))) if slack > 1.0 else cap
+
+
+def ref_balanced_assign(scores: jax.Array, slack: float = 1.0) -> jax.Array:
+    """Lexsort reference. ``scores``: (M, G) preference matrix; returns
+    (G, cap) int32 item ids (padding slots hold ``M``).
+
+    Items are sorted by (argmax group asc, strength desc, index asc); each
+    group keeps its ``cap`` most confident items, overflow items take the
+    remaining free slots in ascending slot order.
+    """
+    m, g = scores.shape
+    cap = compute_cap(m, g, slack)
+    total = g * cap
+    pref = jnp.argmax(scores, axis=1)          # (M,)
+    strength = jnp.max(scores, axis=1)
+    # Sort by (pref asc, strength desc): within a group, confident items
+    # first, so spill-over moves the *least* confident items.
+    order = jnp.lexsort((-strength, pref))     # (M,)
+    pref_sorted = pref[order]
+    first = jnp.searchsorted(pref_sorted, jnp.arange(g))     # group starts
+    rank = jnp.arange(m) - first[pref_sorted]                # rank in group
+    keep = rank < cap
+    kept_slot = pref_sorted * cap + jnp.minimum(rank, cap - 1)
+    # Free slots: slot (gi, r) is free iff r >= (kept count of gi).
+    counts = jnp.minimum(jnp.bincount(pref, length=g), cap)
+    sidx = jnp.arange(total)
+    free = (sidx % cap) >= counts[sidx // cap]
+    free_slots = jnp.argsort(~free, stable=True)   # free slot ids, ascending
+    ovf_rank = jnp.cumsum(~keep) - 1
+    slot = jnp.where(keep, kept_slot,
+                     free_slots[jnp.clip(ovf_rank, 0, total - 1)])
+    row_of_slot = (jnp.full((total,), m, jnp.int32)
+                   .at[slot].set(order.astype(jnp.int32), mode="drop"))
+    return row_of_slot.reshape(g, cap)

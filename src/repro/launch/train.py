@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import registry
+from repro.core.schedule import SparsitySchedule
 from repro.data.pipeline import SyntheticTokens, make_batch_iterator
 from repro.launch.mesh import make_mesh_from_devices
 from repro.runtime.fault import PreemptionGuard, StepRunner
@@ -29,6 +30,7 @@ from repro.train import step as step_lib
 def train_lm(arch: str, *, smoke: bool = True, steps: int = 20,
              batch: int = 8, seq: int = 256, lr: float = 3e-4,
              flgw_groups: int = 1, flgw_path: str = "masked",
+             refresh_every: int = 1, refresh: str = "period",
              optimizer: str = "adamw", ckpt_dir: str = None,
              save_every: int = 100, log_every: int = 10,
              banded: bool = False, seed: int = 0):
@@ -37,6 +39,14 @@ def train_lm(arch: str, *, smoke: bool = True, steps: int = 20,
     if flgw_groups > 1:
         overrides = dict(flgw_groups=flgw_groups, flgw_path=flgw_path)
     cfg = get(arch, **overrides)
+    # plan-refresh schedule for the grouped path (the decoder stack shares
+    # the MARL engine's encoder subsystem; see repro.core.encoder)
+    schedule = None
+    if flgw_groups > 1 and flgw_path == "grouped" and \
+            (refresh_every > 1 or refresh != "period"):
+        schedule = SparsitySchedule(groups=flgw_groups,
+                                    refresh_every=refresh_every,
+                                    refresh=refresh)
 
     mesh = make_mesh_from_devices()
     specs = state_lib.state_specs(cfg, optimizer=optimizer)
@@ -53,7 +63,7 @@ def train_lm(arch: str, *, smoke: bool = True, steps: int = 20,
 
         step_fn = jax.jit(
             step_lib.make_train_step(cfg, optimizer=optimizer, lr=lr,
-                                     banded=banded),
+                                     banded=banded, schedule=schedule),
             in_shardings=(state_sh, batch_sh),
             out_shardings=(state_sh, None), donate_argnums=(0,))
 
@@ -105,6 +115,12 @@ def main(argv=None):
     ap.add_argument("--flgw-groups", type=int, default=1)
     ap.add_argument("--flgw-path", default="masked",
                     choices=("masked", "grouped"))
+    ap.add_argument("--refresh", type=int, default=1,
+                    help="re-encode the grouped path's plan cache every k "
+                         "steps (OSEL amortization; 1 = every step)")
+    ap.add_argument("--refresh-mode", default="period",
+                    choices=("period", "on_change", "hybrid"),
+                    help="plan-refresh policy (see repro.core.encoder)")
     ap.add_argument("--optimizer", default="adamw",
                     choices=("adamw", "rmsprop"))
     ap.add_argument("--ckpt-dir", default=None)
@@ -115,7 +131,8 @@ def main(argv=None):
     a = ap.parse_args(argv)
     train_lm(a.arch, smoke=a.smoke, steps=a.steps, batch=a.batch,
              seq=a.seq, lr=a.lr, flgw_groups=a.flgw_groups,
-             flgw_path=a.flgw_path, optimizer=a.optimizer,
+             flgw_path=a.flgw_path, refresh_every=a.refresh,
+             refresh=a.refresh_mode, optimizer=a.optimizer,
              ckpt_dir=a.ckpt_dir, save_every=a.save_every,
              log_every=a.log_every, banded=a.banded, seed=a.seed)
 

@@ -6,7 +6,14 @@ The single-environment module grew into the ``repro.marl.envs`` subpackage
 code and tests keep working; new code should go through
 ``repro.marl.envs.get(name)``.
 """
-from repro.marl.envs.predator_prey import (  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.marl.env is a back-compat shim; use repro.marl.envs "
+    "(e.g. repro.marl.envs.get('predator_prey')) instead.",
+    DeprecationWarning, stacklevel=2)
+
+from repro.marl.envs.predator_prey import (  # noqa: E402,F401
     _MOVES,
     N_ACTIONS,
     EnvConfig,

@@ -18,7 +18,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import grouped
+from repro.core import encoder
 from repro.core.flgw import FLGWConfig
 from repro.models.layers import dense_init, plan_of, proj
 
@@ -69,17 +69,18 @@ def init(key: jax.Array, cfg: IC3NetConfig):
     return params, specs
 
 
-def encode_plans(params, cfg: IC3NetConfig) -> grouped.PlanState:
-    """One OSEL-analogue pass: the GroupPlan of every FLGW layer.
+def encode_plans(params, cfg: IC3NetConfig) -> encoder.PlanState:
+    """One OSEL-analogue pass: the PlanState of every FLGW layer.
 
-    Returns ``{}`` unless the compact ``grouped`` path is active — the
-    masked/dense paths never consume plans, and an empty dict keeps the
-    training-loop carry structure uniform across configurations.
+    Returns the empty PlanState unless the compact ``grouped`` path is
+    active — the masked/dense paths never consume plans, and the empty
+    state keeps the training-loop carry structure uniform across
+    configurations.
     """
     fl = cfg.flgw
     if fl is None or fl.path != "grouped":
-        return {}
-    return grouped.encode_plans(params, fl)
+        return encoder.empty_state()
+    return encoder.encode_plans(params, fl)
 
 
 def flops_per_step(cfg: IC3NetConfig) -> float:

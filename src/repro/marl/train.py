@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import flgw, grouped
+from repro.core import encoder, flgw, grouped
 from repro.core.schedule import SparsitySchedule
 from repro.marl import envs as envs_mod
 from repro.marl import ic3net
@@ -121,23 +121,19 @@ def _mean_mask_sparsity(params, cfg: ic3net.IC3NetConfig) -> jax.Array:
 
 def maybe_refresh_plans(params, plans, it, cfg: ic3net.IC3NetConfig,
                         schedule: Optional[SparsitySchedule]):
-    """Amortized OSEL: re-encode the FLGW plan cache only on refresh steps.
+    """Amortized OSEL: re-encode the FLGW plan cache only when due.
 
-    ``plans`` is the PlanState carried through the training loop; every
-    ``schedule.refresh_every`` iterations (``it % k == 0``) it is re-encoded
-    from the current grouping matrices via one ``encode_plans`` pass, and
-    reused stale otherwise — the paper's once-per-iteration encoding,
-    further amortized over k steps. ``{}`` (non-grouped configs) passes
-    through untouched; ``it`` may be a traced int32 (``lax.cond`` inside).
+    ``plans`` is the PlanState carried through the training loop;
+    :func:`repro.core.encoder.maybe_refresh` decides per the schedule's
+    ``refresh`` mode — fixed period (``it % refresh_every == 0``), or
+    change-driven from the carried argmax signature — and re-encodes via
+    one ``encode_plans`` pass, reusing the stale plans otherwise. The
+    empty state (non-grouped configs) passes through untouched; ``it`` may
+    be a traced int32 (``lax.cond`` inside).
     """
     if not plans:
         return plans
-    k = 1 if schedule is None else max(1, schedule.refresh_every)
-    if k == 1:
-        return ic3net.encode_plans(params, cfg)
-    return jax.lax.cond(jnp.asarray(it, jnp.int32) % k == 0,
-                        lambda: ic3net.encode_plans(params, cfg),
-                        lambda: plans)
+    return encoder.maybe_refresh(params, plans, it, cfg.flgw, schedule)
 
 
 def _loss_grads(params, key, it, cfg, ecfg, tcfg, env,
@@ -231,6 +227,11 @@ _train_chunk_pmap = partial(jax.pmap, axis_name="dev",
 _encode_plans = partial(jax.jit, static_argnames=("cfg",))(
     ic3net.encode_plans)
 
+# host-loop mirror of the in-scan refresh: one jitted maybe_refresh keeps
+# the host loop bit-identical to the scan carry under every refresh mode
+_refresh_plans = partial(jax.jit, static_argnames=("cfg", "schedule"))(
+    maybe_refresh_plans)
+
 
 def _init(cfg, ecfg, env, seed):
     cfg = dataclasses.replace(cfg, obs_dim=env.obs_dim(ecfg),
@@ -287,10 +288,10 @@ def train(cfg: ic3net.IC3NetConfig, ecfg=None, tcfg: TrainConfig = None,
         }
 
     if host_loop:
-        refresh = 1 if schedule is None else max(1, schedule.refresh_every)
         for it in range(iterations):
-            if plans and it % refresh == 0:
-                plans = _encode_plans(params, cfg)
+            if plans:
+                plans = _refresh_plans(params, plans, it, cfg=cfg,
+                                       schedule=schedule)
             key, k = jax.random.split(key)
             t0 = time.perf_counter()
             params, opt_state, metrics = train_step(

@@ -16,6 +16,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.encoder import PlanState as EncoderPlanState
 from repro.core.flgw import FLGWConfig, init_grouping, mask_ste
 from repro.core.grouped import GroupPlan, grouped_apply
 from repro.sharding.partition import constrain
@@ -130,8 +131,13 @@ def mlp_init(key, d: int, ff: int, *, gated: bool = True,
     return params, specs
 
 
-def plan_of(plans: Optional[dict], name: str) -> Optional[GroupPlan]:
-    """Look one layer's GroupPlan out of a PlanState (None when absent)."""
+def plan_of(plans, name: str) -> Optional[GroupPlan]:
+    """Look one entry out of a PlanState / nested plans dict (None when
+    absent). Accepts the ``repro.core.encoder.PlanState`` wrapper, the raw
+    nested dict, or None; the result is a GroupPlan at leaf level or a
+    sub-dict for nested lookups."""
+    if isinstance(plans, EncoderPlanState):
+        plans = plans.plans
     if not plans:
         return None
     return plans.get(name)

@@ -15,13 +15,14 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import encoder as planenc
 from repro.core.flgw import FLGWConfig
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models.config import ModelConfig, SlotSpec
-from repro.models.layers import (embed, embed_init, mlp, mlp_init, rmsnorm,
-                                 rmsnorm_init, softcap, unembed)
+from repro.models.layers import (embed, embed_init, mlp, mlp_init, plan_of,
+                                 rmsnorm, rmsnorm_init, softcap, unembed)
 from repro.sharding.partition import constrain
 
 
@@ -29,6 +30,20 @@ def _flgw_cfg(cfg: ModelConfig, target: str) -> Optional[FLGWConfig]:
     if not cfg.flgw_on(target):
         return None
     return FLGWConfig(groups=cfg.flgw_groups, path=cfg.flgw_path)
+
+
+def encode_plans(params, cfg: ModelConfig) -> planenc.PlanState:
+    """One OSEL-analogue pass over the LM stack's FLGW projections.
+
+    Plans for the scanned decoder blocks come back stacked along the
+    ``n_blocks`` axis (mirroring the stacked params) and ride the block
+    scan as per-block xs; the empty state is returned unless the compact
+    ``grouped`` path is active.
+    """
+    if cfg.flgw_groups <= 1 or cfg.flgw_path != "grouped":
+        return planenc.empty_state()
+    return planenc.encode_plans(
+        params, FLGWConfig(groups=cfg.flgw_groups, path=cfg.flgw_path))
 
 
 # ---------------------------------------------------------------------------
@@ -115,7 +130,11 @@ def lm_init(key, cfg: ModelConfig):
 def _slot_apply(p, x, positions, cfg: ModelConfig, slot: SlotSpec, *,
                 cache=None, pos=None, encoder_out=None, prefix_len=0,
                 q_chunk=512, banded=False, ssd_unroll=False,
-                moe_dropless=False, attn_identity=False):
+                moe_dropless=False, attn_identity=False, plans=None):
+    """``plans``: this slot's entry of the (sliced) PlanState — cached
+    FLGW metadata for the ``ffn`` projections. Mixer/MoE FLGW targets fall
+    back to per-call re-encoding (plan=None) until they grow plan threading.
+    """
     aux = jnp.zeros((), jnp.float32)
     new_cache = {}
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
@@ -148,14 +167,15 @@ def _slot_apply(p, x, positions, cfg: ModelConfig, slot: SlotSpec, *,
         return x, aux, new_cache
     h = rmsnorm(p["norm2"], x, cfg.norm_eps)
     if slot.ffn == "mlp":
-        h = mlp(p["ffn"], h, _flgw_cfg(cfg, "mlp"))
+        h = mlp(p["ffn"], h, _flgw_cfg(cfg, "mlp"),
+                plans=plan_of(plans, "ffn"))
     else:
         h, a = moe_mod.moe(p["moe"], h, cfg, flgw=_flgw_cfg(cfg, "moe"),
                            dropless=moe_dropless or cache is not None)
         aux = aux + a
         if slot.ffn == "moe_dense":
             h = h + mlp(p["ffn"], rmsnorm(p["norm2"], x, cfg.norm_eps),
-                        _flgw_cfg(cfg, "mlp"))
+                        _flgw_cfg(cfg, "mlp"), plans=plan_of(plans, "ffn"))
     return x + h, aux, new_cache
 
 
@@ -163,13 +183,17 @@ def _apply_blocks(params, cfg: ModelConfig, pattern, x, positions, *,
                   caches=None, pos=None, encoder_out=None, prefix_len=0,
                   q_chunk=512, banded=False, remat=False, ssd_unroll=False,
                   unroll_blocks=False, moe_dropless=False,
-                  attn_identity=False):
+                  attn_identity=False, plans=None):
     has_cache = caches is not None
+    plans = plans or {}   # nested dict: slot{i} -> ffn -> stacked GroupPlans
 
     def body(carry, xs):
         x, aux = carry
         x = constrain(x, ("batch", None, None))   # keep batch data-parallel
-        block_p, block_c = xs if has_cache else (xs, None)
+        if has_cache:
+            block_p, block_c, block_pl = xs
+        else:
+            (block_p, block_pl), block_c = xs, None
         new_c = {}
         for i, slot in enumerate(pattern):
             c_i = None if block_c is None else block_c.get(f"slot{i}")
@@ -177,7 +201,8 @@ def _apply_blocks(params, cfg: ModelConfig, pattern, x, positions, *,
                 block_p[f"slot{i}"], x, positions, cfg, slot, cache=c_i,
                 pos=pos, encoder_out=encoder_out, prefix_len=prefix_len,
                 q_chunk=q_chunk, banded=banded, ssd_unroll=ssd_unroll,
-                moe_dropless=moe_dropless, attn_identity=attn_identity)
+                moe_dropless=moe_dropless, attn_identity=attn_identity,
+                plans=plan_of(block_pl, f"slot{i}"))
             aux = aux + a
             if nc:
                 new_c[f"slot{i}"] = nc
@@ -186,7 +211,9 @@ def _apply_blocks(params, cfg: ModelConfig, pattern, x, positions, *,
     if remat:
         body = jax.checkpoint(body, prevent_cse=False)
     aux0 = jnp.zeros((), jnp.float32)
-    xs = (params, caches) if has_cache else params
+    # plans ride the scan as per-block xs ({} contributes no leaves — the
+    # stacked GroupPlans slice alongside their stacked params)
+    xs = (params, caches, plans) if has_cache else (params, plans)
 
     if unroll_blocks:
         # Straight-line block loop — the dry-run cost variant. HLO cost
@@ -211,17 +238,23 @@ def lm_apply(params, cfg: ModelConfig, tokens, positions, *,
              patch_embeds=None, frames=None, cache=None, q_chunk=512,
              banded=False, remat=None, return_hidden=False,
              ssd_unroll=False, unroll_blocks=False, moe_dropless=False,
-             attn_identity=False):
+             attn_identity=False, plans=None):
     """Forward pass. Returns (logits, aux_loss, new_cache).
 
     tokens: (B, S) int32; positions: (B, S) int32.
     patch_embeds: (B, prefix, d) VLM stub prefix (prefill only).
     frames: (B, T, d) audio-stub encoder input (whisper).
     cache: decode caches from ``init_cache``.
+    plans: cached FLGW metadata from :func:`encode_plans` (PlanState or its
+    raw dict); None falls back to per-projection re-encoding on the
+    grouped path.
     return_hidden: skip unembedding — the training loss computes logits in
     sequence chunks (the full (B, S, vocab) tensor at 256k vocab never fits).
     """
     remat = cfg.remat if remat is None else remat
+    if isinstance(plans, planenc.PlanState):
+        plans = plans.plans
+    plans = plans or {}
     x = embed(params["embed"], tokens, cfg.d_model).astype(cfg.dtype)
     prefix_len = 0
     if patch_embeds is not None:
@@ -241,7 +274,7 @@ def lm_apply(params, cfg: ModelConfig, tokens, positions, *,
                 params["encoder"], cfg, (enc_slot,),
                 frames.astype(cfg.dtype), enc_pos, q_chunk=q_chunk,
                 remat=remat, ssd_unroll=ssd_unroll,
-                unroll_blocks=unroll_blocks)
+                unroll_blocks=unroll_blocks, plans=plans.get("encoder"))
             encoder_out = rmsnorm(params["enc_norm"], eo, cfg.norm_eps)
             # Encoder self-attn must be bidirectional: handled by window=0 &
             # causal mask relaxation below (prefix over the whole stream).
@@ -255,7 +288,8 @@ def lm_apply(params, cfg: ModelConfig, tokens, positions, *,
         pos=pos, encoder_out=encoder_out, prefix_len=prefix_len,
         q_chunk=q_chunk, banded=banded, remat=remat and cache is None,
         ssd_unroll=ssd_unroll, unroll_blocks=unroll_blocks,
-        moe_dropless=moe_dropless, attn_identity=attn_identity)
+        moe_dropless=moe_dropless, attn_identity=attn_identity,
+        plans=plans.get("blocks"))
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     if return_hidden:
         out = x if prefix_len == 0 else x[:, prefix_len:]

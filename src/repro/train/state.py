@@ -22,6 +22,14 @@ class TrainState(NamedTuple):
     params: Any
     opt: Any                      # AdamWState | rmsprop tree
     step: jax.Array
+    # Cached FLGW sparse metadata (repro.core.encoder.PlanState) on the
+    # grouped path; () otherwise, so non-grouped states keep their exact
+    # pre-plans pytree leaves (checkpoints, shardings, donation unchanged).
+    plans: Any = ()
+
+
+def _uses_plans(cfg: ModelConfig) -> bool:
+    return cfg.flgw_groups > 1 and cfg.flgw_path == "grouped"
 
 
 def init_state(key, cfg: ModelConfig, *, optimizer: str = "adamw"
@@ -33,8 +41,9 @@ def init_state(key, cfg: ModelConfig, *, optimizer: str = "adamw"
         opt = rmsprop_init(params)
     else:
         raise ValueError(optimizer)
+    plans = transformer.encode_plans(params, cfg) if _uses_plans(cfg) else ()
     return TrainState(params=params, opt=opt,
-                      step=jnp.zeros((), jnp.int32))
+                      step=jnp.zeros((), jnp.int32), plans=plans)
 
 
 def param_specs(cfg: ModelConfig):
@@ -55,6 +64,18 @@ def param_specs(cfg: ModelConfig):
     return box["specs"]
 
 
+def plan_specs(cfg: ModelConfig):
+    """Logical spec tree of the cached PlanState (replicated: the compact
+    metadata is small int/bool tensors consumed whole by every shard)."""
+    if not _uses_plans(cfg):
+        return ()
+    aplans = jax.eval_shape(
+        lambda k: transformer.encode_plans(transformer.lm_init(k, cfg)[0],
+                                           cfg),
+        jax.random.PRNGKey(0))
+    return jax.tree.map(lambda a: (None,) * a.ndim, aplans)
+
+
 def state_specs(cfg: ModelConfig, *, optimizer: str = "adamw"):
     """Logical spec tree with the same structure as ``init_state``'s output."""
     pspecs = param_specs(cfg)
@@ -62,7 +83,8 @@ def state_specs(cfg: ModelConfig, *, optimizer: str = "adamw"):
         opt = AdamWState(mu=pspecs, nu=pspecs, count=())
     else:
         opt = pspecs
-    return TrainState(params=pspecs, opt=opt, step=())
+    return TrainState(params=pspecs, opt=opt, step=(),
+                      plans=plan_specs(cfg))
 
 
 def abstract_state(cfg: ModelConfig, *, optimizer: str = "adamw"):

@@ -18,6 +18,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import encoder as planenc
+from repro.core.flgw import FLGWConfig
 from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.optim.optimizers import adamw, clip_by_global_norm, rmsprop
@@ -40,14 +42,15 @@ def pick_q_chunk(s: int, pref: int = 512) -> int:
 
 def _loss_fn(params, batch, cfg: ModelConfig, q_chunk: int, banded: bool,
              ce_chunk: int = 512, ssd_unroll: bool = False,
-             unroll_blocks: bool = False, attn_identity: bool = False):
+             unroll_blocks: bool = False, attn_identity: bool = False,
+             plans=None):
     hidden, aux, _ = transformer.lm_apply(
         params, cfg, batch["tokens"], batch["positions"],
         patch_embeds=batch.get("patch_embeds"),
         frames=batch.get("frames"),
         q_chunk=q_chunk, banded=banded, return_hidden=True,
         ssd_unroll=ssd_unroll, unroll_blocks=unroll_blocks,
-        attn_identity=attn_identity)
+        attn_identity=attn_identity, plans=plans)
     ce = chunked_cross_entropy(
         hidden, params["embed"]["embedding"], batch["targets"],
         logit_softcap=cfg.logit_softcap, chunk=ce_chunk)
@@ -59,22 +62,36 @@ def make_train_step(cfg: ModelConfig, *, optimizer: str = "adamw",
                     microbatches: int = 1, banded: bool = False,
                     q_chunk: Optional[int] = None, ce_chunk: int = 512,
                     ssd_unroll: bool = False, unroll_blocks: bool = False,
-                    attn_identity: bool = False):
+                    attn_identity: bool = False, schedule=None):
     """Returns ``train_step(state, batch) -> (state, metrics)``.
 
     ``q_chunk`` / ``ce_chunk`` / ``ssd_unroll`` exist for the dry-run cost
     variant (scan-free lowering so HLO cost analysis sees every op); the
     real launcher uses the memory-bounded defaults.
+
+    On the FLGW grouped path the step drives the same plan-refresh logic
+    as the MARL engine: ``state.plans`` (the cached PlanState built at
+    ``init_state``) passes through ``encoder.maybe_refresh`` against the
+    ``schedule``'s refresh mode before the forward, so every projection
+    consumes cached metadata instead of re-encoding per call, and the
+    (possibly re-encoded) plans carry into the next state.
     """
+    uses_plans = cfg.flgw_groups > 1 and cfg.flgw_path == "grouped"
+    fl_cfg = FLGWConfig(groups=cfg.flgw_groups, path=cfg.flgw_path)
 
     def train_step(state: TrainState, batch):
         s = batch["tokens"].shape[1]
         qc = q_chunk or pick_q_chunk(s)
+        plans = state.plans
+        if uses_plans and isinstance(plans, planenc.PlanState):
+            plans = planenc.maybe_refresh(state.params, plans, state.step,
+                                          fl_cfg, schedule)
         grad_fn = jax.value_and_grad(
             functools.partial(_loss_fn, cfg=cfg, q_chunk=qc, banded=banded,
                               ce_chunk=ce_chunk, ssd_unroll=ssd_unroll,
                               unroll_blocks=unroll_blocks,
-                              attn_identity=attn_identity),
+                              attn_identity=attn_identity,
+                              plans=plans if uses_plans else None),
             has_aux=True)
 
         if microbatches == 1:
@@ -103,7 +120,8 @@ def make_train_step(cfg: ModelConfig, *, optimizer: str = "adamw",
             params, opt = adamw(state.params, grads, state.opt, lr=lr)
         else:
             params, opt = rmsprop(state.params, grads, state.opt, lr=lr)
-        new_state = TrainState(params=params, opt=opt, step=state.step + 1)
+        new_state = TrainState(params=params, opt=opt, step=state.step + 1,
+                               plans=plans)
         metrics = dict(metrics, loss=loss, grad_norm=gnorm)
         return new_state, metrics
 

@@ -1,0 +1,271 @@
+"""Encoder subsystem: PlanState structure, signatures, refresh modes, and
+the LM decoder stack's cached plans (no per-projection re-encode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encoder, grouped
+from repro.core.flgw import FLGWConfig
+from repro.core.schedule import SparsitySchedule
+from repro.marl import ic3net
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.train import state as state_lib
+from repro.train import step as step_lib
+
+FL = FLGWConfig(groups=4, path="grouped")
+
+
+def _tiny_lm_cfg(**kw):
+    base = dict(name="tiny", family="dense", n_layers=2, d_model=32,
+                n_heads=2, n_kv_heads=2, d_ff=64, vocab=64, head_dim=16,
+                flgw_groups=4, flgw_path="grouped", dtype=jnp.float32)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _ic3net_params(seed=0):
+    cfg = ic3net.IC3NetConfig(hidden=16, obs_dim=7, flgw_groups=4,
+                              flgw_path="grouped")
+    return ic3net.init(jax.random.PRNGKey(seed), cfg)[0], cfg
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# Plan structure
+# ---------------------------------------------------------------------------
+
+def test_transpose_plan_is_an_involution():
+    params, _ = _ic3net_params()
+    plan = grouped.make_plan(params["enc"]["ig"], params["enc"]["og"], 1.25)
+    assert _tree_equal(grouped.transpose_plan(grouped.transpose_plan(plan)),
+                       plan)
+
+
+def _plan_leaf_paths(plans, _path=()):
+    for name, p in sorted(plans.items()):
+        if isinstance(p, grouped.GroupPlan):
+            yield (*_path, name)
+        else:
+            yield from _plan_leaf_paths(p, (*_path, name))
+
+
+def test_encode_plans_structure_mirrors_iter_flgw_layers():
+    """One encoder for every workload: on a nested IC3Net + decoder param
+    tree the PlanState has exactly one GroupPlan per FLGW layer, at the
+    same path."""
+    marl_params, _ = _ic3net_params()
+    cfg = _tiny_lm_cfg()
+    lm_params, _ = transformer.lm_init(jax.random.PRNGKey(1), cfg)
+    tree = {"ic3net": marl_params, "decoder": lm_params}
+    state = encoder.encode_plans(tree, FL)
+    want = sorted(path for path, _ in grouped.iter_flgw_layers(tree))
+    got = sorted(_plan_leaf_paths(state.plans))
+    assert got == want
+    assert len(want) > 5          # both subsystems actually contribute
+
+
+def test_decoder_plans_are_stacked_like_their_params():
+    """Scanned blocks carry stacked params -> stacked plans (same leading
+    axis), so they slice per block as scan xs."""
+    cfg = _tiny_lm_cfg()
+    params, _ = transformer.lm_init(jax.random.PRNGKey(0), cfg)
+    state = transformer.encode_plans(params, cfg)
+    ffn = state.plans["blocks"]["slot0"]["ffn"]
+    for name in ("up", "gate", "down"):
+        plan = ffn[name]
+        ig = params["blocks"]["slot0"]["ffn"][name]["ig"]
+        assert plan.row_ids.shape[0] == cfg.n_blocks == ig.shape[0]
+        # each block's stacked plan equals the per-block encode
+        one = grouped.make_plan(ig[1], params["blocks"]["slot0"]["ffn"]
+                                [name]["og"][1], FL.capacity_slack)
+        assert _tree_equal(jax.tree.map(lambda a: a[1], plan), one)
+
+
+# ---------------------------------------------------------------------------
+# Signature + refresh modes
+# ---------------------------------------------------------------------------
+
+def _flip_one_argmax(params, layer="enc"):
+    """Flip row 0's argmax of one layer's IG, leaving all else untouched."""
+    p = jax.tree.map(lambda a: a, params)
+    ig = p[layer]["ig"]
+    g = ig.shape[1]
+    cur = int(jnp.argmax(ig[0]))
+    new = (cur + 1) % g
+    p[layer] = dict(p[layer], ig=ig.at[0, new].set(jnp.max(ig[0]) + 1.0))
+    return p
+
+
+def _nudge_without_flip(params):
+    """Perturb every grouping matrix without moving any argmax."""
+    def nudge(path_p):
+        return dict(path_p, ig=path_p["ig"] * 1.0001,
+                    og=path_p["og"] * 1.0001)
+    p = {k: (nudge(v) if isinstance(v, dict) and "ig" in v else v)
+         for k, v in params.items()}
+    for (a, _), (b, _) in zip(grouped.iter_flgw_layers(params),
+                              grouped.iter_flgw_layers(p)):
+        assert a == b
+    return p
+
+
+def test_signature_changes_iff_an_argmax_flips():
+    params, _ = _ic3net_params()
+    sig = encoder.plan_signature(params)
+    assert np.asarray(sig) == np.asarray(encoder.plan_signature(params))
+    nudged = _nudge_without_flip(params)
+    assert np.asarray(encoder.plan_signature(nudged)) == np.asarray(sig)
+    flipped = _flip_one_argmax(params)
+    assert np.asarray(encoder.plan_signature(flipped)) != np.asarray(sig)
+
+
+def test_refresh_on_change_fires_exactly_on_argmax_flip():
+    """on_change: a nudge that moves strengths but no argmax keeps the
+    carried plans bitwise; one flipped argmax re-encodes."""
+    params, cfg = _ic3net_params()
+    state = ic3net.encode_plans(params, cfg)
+    sched = SparsitySchedule(groups=4, refresh_every=1, refresh="on_change")
+    refresh = jax.jit(encoder.maybe_refresh,
+                      static_argnames=("cfg", "schedule"))
+
+    nudged = _nudge_without_flip(params)
+    kept = refresh(nudged, state, 1, cfg=FL, schedule=sched)
+    assert _tree_equal(kept, state)          # no flip -> bitwise stale reuse
+
+    flipped = _flip_one_argmax(params)
+    got = refresh(flipped, state, 2, cfg=FL, schedule=sched)
+    want = encoder.encode_plans(flipped, FL)
+    assert _tree_equal(got, want)            # flip -> fresh encode
+
+
+def test_refresh_hybrid_bounds_staleness_by_period():
+    """hybrid: even with no argmax flip, the refresh_every boundary forces
+    a re-encode (covers spill-order drift from moving strengths)."""
+    params, cfg = _ic3net_params()
+    stale = ic3net.encode_plans(params, cfg)
+    moved = _nudge_without_flip(params)
+    sched = SparsitySchedule(groups=4, refresh_every=3, refresh="hybrid")
+    refresh = jax.jit(encoder.maybe_refresh,
+                      static_argnames=("cfg", "schedule"))
+    off = refresh(moved, stale, 1, cfg=FL, schedule=sched)
+    assert _tree_equal(off, stale)           # not due, no flip
+    on = refresh(moved, stale, 3, cfg=FL, schedule=sched)
+    assert _tree_equal(on, encoder.encode_plans(moved, FL))
+
+
+def test_on_change_parity_with_per_step_encoding():
+    """The acceptance bar: along a param trajectory, change-driven refresh
+    equals per-step re-encoding on every step whose hash changed, and
+    reuses the carry bitwise otherwise."""
+    params, cfg = _ic3net_params()
+    sched = SparsitySchedule(groups=4, refresh_every=1, refresh="on_change")
+    refresh = jax.jit(encoder.maybe_refresh,
+                      static_argnames=("cfg", "schedule"))
+    state = ic3net.encode_plans(params, cfg)
+    seq = [_nudge_without_flip(params),
+           _flip_one_argmax(params),
+           _flip_one_argmax(_flip_one_argmax(params), layer="comm"),
+           _flip_one_argmax(_flip_one_argmax(params), layer="comm")]
+    for t, p in enumerate(seq, start=1):
+        changed = (np.asarray(encoder.plan_signature(p))
+                   != np.asarray(state.sig))
+        prev = state
+        state = refresh(p, state, t, cfg=FL, schedule=sched)
+        if changed:
+            assert _tree_equal(state, encoder.encode_plans(p, FL))
+        else:
+            assert _tree_equal(state, prev)
+
+
+def test_schedule_rejects_unknown_refresh_mode():
+    with pytest.raises(ValueError):
+        SparsitySchedule(groups=4, refresh="sometimes")
+
+
+# ---------------------------------------------------------------------------
+# LM decoder stack: cached plans end to end
+# ---------------------------------------------------------------------------
+
+def _lm_batch(cfg, b=2, s=16):
+    tok = jnp.zeros((b, s), jnp.int32)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    return {"tokens": tok, "targets": tok, "positions": pos}
+
+
+def test_lm_apply_with_plans_never_traces_make_plan(monkeypatch):
+    """Regression guard for the decoder-stack amortization: with a
+    PlanState supplied, tracing the forward hits make_plan zero times; the
+    plan=None fallback re-encodes once per FLGW projection."""
+    calls = {"n": 0}
+    real = grouped.make_plan
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    cfg = _tiny_lm_cfg()
+    params, _ = transformer.lm_init(jax.random.PRNGKey(0), cfg)
+    plans = transformer.encode_plans(params, cfg)
+    batch = _lm_batch(cfg)
+    monkeypatch.setattr(grouped, "make_plan", counting)
+
+    jax.eval_shape(
+        lambda p, pl: transformer.lm_apply(
+            p, cfg, batch["tokens"], batch["positions"], plans=pl,
+            return_hidden=True),
+        params, plans)
+    assert calls["n"] == 0
+
+    jax.eval_shape(
+        lambda p: transformer.lm_apply(
+            p, cfg, batch["tokens"], batch["positions"],
+            return_hidden=True),
+        params)
+    assert calls["n"] == 3        # up/gate/down re-encoded per projection
+
+
+def test_lm_train_step_encodes_once_per_refresh(monkeypatch):
+    """Tracing one LM train step hits make_plan exactly once per FLGW
+    layer — inside the refresh cond — not per projection."""
+    calls = {"n": 0}
+    real = grouped.make_plan
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    cfg = _tiny_lm_cfg()
+    state = state_lib.init_state(jax.random.PRNGKey(0), cfg,
+                                 optimizer="rmsprop")
+    assert isinstance(state.plans, encoder.PlanState)
+    step = step_lib.make_train_step(
+        cfg, optimizer="rmsprop",
+        schedule=SparsitySchedule(groups=4, refresh_every=2))
+    monkeypatch.setattr(grouped, "make_plan", counting)
+    jax.eval_shape(step, state, _lm_batch(cfg))
+    assert calls["n"] == 3        # one encode per FLGW layer, in the cond
+
+
+def test_lm_train_step_runs_and_carries_plans():
+    """End to end on the grouped path: losses finite, plans ride the
+    state, and on_change refresh keeps the step jittable."""
+    cfg = _tiny_lm_cfg()
+    state = state_lib.init_state(jax.random.PRNGKey(0), cfg,
+                                 optimizer="rmsprop")
+    step = jax.jit(step_lib.make_train_step(
+        cfg, optimizer="rmsprop", lr=1e-2,
+        schedule=SparsitySchedule(groups=4, refresh="on_change")))
+    batch = _lm_batch(cfg)
+    for _ in range(3):
+        state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert isinstance(state.plans, encoder.PlanState)
+    assert int(state.step) == 3

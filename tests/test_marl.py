@@ -203,6 +203,42 @@ def test_plan_refresh_reuses_stale_plans_until_boundary():
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_grouped_scan_on_change_matches_host_loop():
+    """Change-driven refresh inside the scan carry: the hash compare +
+    conditional re-encode must mirror the host loop exactly (same jitted
+    maybe_refresh), so trajectories and params agree bit-for-bit-ish."""
+    from repro.core.schedule import SparsitySchedule
+    cfg = ic3net.IC3NetConfig(hidden=16, flgw_groups=4, flgw_path="grouped")
+    ecfg = env_mod.EnvConfig(n_agents=2, size=3, max_steps=6)
+    tcfg = train_mod.TrainConfig(batch=4, lr=0.05)   # lr high: masks churn
+    sched = SparsitySchedule(groups=4, refresh="on_change")
+    p_host, h_host = train_mod.train(cfg, ecfg, tcfg, iterations=5, seed=0,
+                                     schedule=sched, host_loop=True)
+    p_scan, h_scan = train_mod.train(cfg, ecfg, tcfg, iterations=5, seed=0,
+                                     schedule=sched, log_every=2)
+    np.testing.assert_allclose([h["loss"] for h in h_host],
+                               [h["loss"] for h in h_scan], rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(p_host), jax.tree.leaves(p_scan)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_env_shim_still_resolves_with_deprecation_warning():
+    """repro.marl.env stays importable (seed API) but warns, pointing at
+    the envs registry."""
+    import importlib
+    import warnings as w
+
+    from repro.marl import env as shim
+    with w.catch_warnings(record=True) as caught:
+        w.simplefilter("always")
+        shim = importlib.reload(shim)
+    assert any(issubclass(c.category, DeprecationWarning) for c in caught)
+    assert any("repro.marl.envs" in str(c.message) for c in caught)
+    from repro.marl.envs import predator_prey
+    assert shim.reset is predator_prey.reset
+    assert shim.EnvConfig is predator_prey.EnvConfig
+
+
 def test_grouped_stale_plans_actually_change_training():
     """Amortization must be real: with a learning rate high enough to move
     the grouping matrices, refresh_every=4 must diverge from refresh_every=1
@@ -243,7 +279,7 @@ def test_encode_happens_once_per_refresh_not_per_projection(monkeypatch):
     e = envs.get("predator_prey")
     cfg2, key, params, opt_state = train_mod._init(cfg, ecfg, e, seed=0)
     plans = ic3net.encode_plans(params, cfg2)
-    n_flgw_layers = len(plans)
+    n_flgw_layers = len(plans.plans)
     assert n_flgw_layers == 5    # enc, lstm_x, lstm_h, comm, policy
     calls["n"] = 0
     # eager _scan_chunk: lax.scan traces the body exactly once

@@ -1,0 +1,129 @@
+"""Plan-encode kernel: balanced-assign invariants + bitwise kernel parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.kernels.plan_encode import ops as pe_ops
+from repro.kernels.plan_encode import ref as pe_ref
+
+IMPLS = ("reference", "pallas")
+
+
+def _scores(seed, m, g):
+    return jax.random.normal(jax.random.PRNGKey(seed), (m, g))
+
+
+def _assign(scores, slack, impl):
+    return np.asarray(pe_ops.balanced_assign(scores, axis=1, slack=slack,
+                                             impl=impl))
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(4, 96), g=st.sampled_from([2, 4, 8]),
+       slack=st.sampled_from([1.0, 1.25, 1.5]),
+       seed=st.integers(0, 2**31 - 1))
+def test_output_is_permutation_with_padding(m, g, seed, slack):
+    """Every item appears exactly once; padding slots hold the sentinel m."""
+    for impl in IMPLS:
+        ids = _assign(_scores(seed, m, g), slack, impl)
+        cap = pe_ref.compute_cap(m, g, slack)
+        assert ids.shape == (g, cap)
+        valid = ids[ids < m]
+        assert sorted(valid.tolist()) == list(range(m))
+        assert (ids[ids >= m] == m).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(4, 96), g=st.sampled_from([2, 4, 8]),
+       seed=st.integers(0, 2**31 - 1))
+def test_zero_capacity_deviation_at_slack_one(m, g, seed):
+    """slack=1.0 reproduces the strict equal-deal: group loads deviate only
+    by the ceil-padding (zero when g divides m) — the paper's balanced
+    workload, by construction."""
+    for impl in IMPLS:
+        ids = _assign(_scores(seed, m, g), 1.0, impl)
+        loads = (ids < m).sum(axis=1)
+        assert loads.sum() == m
+        if m % g == 0:
+            assert (loads == m // g).all()      # zero deviation
+        else:
+            assert loads.max() - loads.min() <= 1 + (g * (-(-m // g)) - m)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(8, 96), g=st.sampled_from([2, 4]),
+       slack=st.sampled_from([1.0, 1.25]),
+       seed=st.integers(0, 2**31 - 1))
+def test_overflow_spills_only_least_confident(m, g, seed, slack):
+    """An over-popular group keeps its cap most-confident preferrers; only
+    the tail spills to other groups' free slots."""
+    scores = _scores(seed, m, g)
+    pref = np.asarray(jnp.argmax(scores, axis=1))
+    strength = np.asarray(jnp.max(scores, axis=1))
+    for impl in IMPLS:
+        ids = _assign(scores, slack, impl)
+        cap = ids.shape[1]
+        for gi in range(g):
+            members = np.where(pref == gi)[0]
+            if len(members) <= cap:
+                continue
+            # top-cap by (strength desc, index asc) — the lexsort order
+            order = members[np.lexsort((members, -strength[members]))]
+            expect_kept = set(order[:cap].tolist())
+            got_kept = set(int(i) for i in ids[gi] if i < m)
+            assert got_kept == expect_kept
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(8, 96), g=st.sampled_from([2, 4, 8]),
+       seed=st.integers(0, 2**31 - 1))
+def test_slack_keeps_more_argmax_preferences(m, g, seed):
+    """The capacity-factor trade: slack headroom lets more items stay in
+    their argmax group (never fewer)."""
+    scores = _scores(seed, m, g)
+    pref = np.asarray(jnp.argmax(scores, axis=1))
+
+    def n_kept(slack, impl):
+        ids = _assign(scores, slack, impl)
+        kept = 0
+        for gi in range(g):
+            kept += sum(1 for i in ids[gi] if i < m and pref[i] == gi)
+        return kept
+
+    for impl in IMPLS:
+        assert n_kept(1.5, impl) >= n_kept(1.25, impl) >= n_kept(1.0, impl)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(2, 160), g=st.sampled_from([2, 3, 4, 8, 16]),
+       slack=st.sampled_from([1.0, 1.25, 1.5, 2.0]),
+       seed=st.integers(0, 2**31 - 1))
+def test_kernel_bitwise_matches_lexsort_reference(m, g, seed, slack):
+    """The acceptance bar: the counting-sort kernel reproduces the lexsort
+    reference bit for bit, including slack>1 spill ordering."""
+    scores = _scores(seed, m, g)
+    ref = np.asarray(pe_ref.ref_balanced_assign(scores, slack))
+    got = _assign(scores, slack, "pallas")
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_batched_encode_matches_per_layer_loop():
+    """Leading (stacked-layer) dims fold into the kernel grid."""
+    key = jax.random.PRNGKey(7)
+    scores = jax.random.normal(key, (3, 40, 4))
+    got = np.asarray(pe_ops.balanced_assign(scores, axis=1, slack=1.25))
+    want = np.stack([np.asarray(pe_ref.ref_balanced_assign(scores[i], 1.25))
+                     for i in range(3)])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_axis0_matches_transposed_axis1():
+    """balanced_assign(og, axis=0) == balanced_assign(og.T, axis=1) — the
+    identity the transpose-plan trick rests on."""
+    key = jax.random.PRNGKey(11)
+    og = jax.random.normal(key, (4, 56))
+    a0 = np.asarray(pe_ops.balanced_assign(og, axis=0, slack=1.25))
+    a1 = np.asarray(pe_ops.balanced_assign(og.T, axis=1, slack=1.25))
+    np.testing.assert_array_equal(a0, a1)
