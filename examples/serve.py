@@ -5,8 +5,16 @@ prompts is prefilled (cache-free forward -> first token), then decoded
 token by token through the ring-buffer KV/SSM caches. Reports per-phase
 throughput.
 
+On the FLGW grouped path (``--path grouped``) the serving contract is
+plan-aware: ``transformer.init_cache(..., params=params)`` encodes the
+sparse metadata (a ``repro.core.encoder.PlanState``) once and caches it
+*beside* the KV/SSM buffers; every prefill/decode step then runs the
+grouped Pallas kernel against that amortized metadata instead of
+re-encoding per projection per token.
+
   PYTHONPATH=src python examples/serve.py --arch gemma2_2b --batch 4 \
-      --prompt-len 64 --gen 32
+      --prompt-len 64 --gen 32 [--groups 4 --path grouped \
+      --targets mlp,attn]
 """
 import argparse
 import time
@@ -15,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import registry
+from repro.core import encoder
 from repro.models import transformer
 from repro.train import step as step_lib
 
@@ -26,9 +35,17 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--groups", type=int, default=1)
+    ap.add_argument("--path", default="masked",
+                    choices=("masked", "grouped"),
+                    help="FLGW execution path when --groups > 1")
+    ap.add_argument("--targets", default="mlp",
+                    help="comma-separated FLGW targets (mlp,attn,ssm,moe)")
     args = ap.parse_args(argv)
 
-    overrides = {"flgw_groups": args.groups} if args.groups > 1 else {}
+    overrides = {}
+    if args.groups > 1:
+        overrides = {"flgw_groups": args.groups, "flgw_path": args.path,
+                     "flgw_targets": tuple(args.targets.split(","))}
     cfg = registry.get_smoke_config(args.arch, **overrides)
     key = jax.random.PRNGKey(0)
     params, _ = transformer.lm_init(key, cfg)
@@ -45,7 +62,14 @@ def main(argv=None):
     #  so windowed ring buffers stay exact; a production server would batch
     #  chunked prefill — see launch/dryrun.py's prefill cells)
     serve = jax.jit(step_lib.make_serve_step(cfg))
-    cache = transformer.init_cache(cfg, b, max_seq)
+    # Plan-aware cache: on the grouped path this encodes the PlanState once
+    # and parks it beside the KV/SSM buffers for every step below.
+    cache = transformer.init_cache(cfg, b, max_seq, params=params)
+    if isinstance(cache["plans"], encoder.PlanState):
+        n_plans = sum(1 for _ in encoder.iter_flgw_layers(params))
+        print(f"serving plan-aware: PlanState with {n_plans} cached "
+              f"GroupPlans rides the cache (G={cfg.flgw_groups}, "
+              f"targets={cfg.flgw_targets})")
     if cfg.encoder_layers:
         cache["encoder_out"] = jnp.zeros((b, cfg.num_frames, cfg.d_model),
                                          cfg.dtype)

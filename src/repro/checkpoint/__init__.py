@@ -1,5 +1,5 @@
 from repro.checkpoint.store import (save_checkpoint, restore_checkpoint,
-                                    latest_step, list_steps)
+                                    latest_step, list_steps, manifest_paths)
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "list_steps"]
+           "list_steps", "manifest_paths"]

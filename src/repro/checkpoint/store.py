@@ -99,12 +99,32 @@ def latest_step(ckpt_dir) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def manifest_paths(ckpt_dir, *, step: Optional[int] = None) -> set:
+    """Leaf keystr paths recorded in one checkpoint's manifest."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    return {e["path"] for e in manifest["leaves"]}
+
+
 def restore_checkpoint(ckpt_dir, target_tree, *, step: Optional[int] = None,
-                       shardings=None, verify: bool = True):
+                       shardings=None, verify: bool = True,
+                       strict: bool = True):
     """Restore into the structure of ``target_tree``.
 
     ``shardings``: optional matching tree of NamedSharding — each leaf is
     device_put with its sharding (elastic reshard: works for any mesh).
+    ``strict=False`` tolerates target leaves the manifest does not record
+    — they keep the value already in ``target_tree`` — instead of raising.
+    The main client is checkpoint *schema growth*: e.g. grouped
+    ``TrainState``s grew derived ``plans`` leaves that pre-plans manifests
+    lack (callers then recompute the kept leaves — see
+    ``repro.train.state.restore_state``, which migrates such checkpoints
+    and re-encodes the plans from the restored params).
     """
     ckpt_dir = pathlib.Path(ckpt_dir)
     if step is None:
@@ -118,9 +138,23 @@ def restore_checkpoint(ckpt_dir, target_tree, *, step: Optional[int] = None,
     flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
     sh_flat = (jax.tree_util.tree_leaves(shardings)
                if shardings is not None else [None] * len(flat))
+    missing = [jax.tree_util.keystr(kp) for kp, _ in flat
+               if jax.tree_util.keystr(kp) not in by_path]
+    if missing and strict:
+        raise KeyError(
+            f"{d} records {len(by_path)} leaves but the restore target has "
+            f"{len(missing)} the manifest does not (e.g. {missing[0]}). "
+            "If the target schema grew since the save (pre-plans grouped "
+            "checkpoints lack TrainState.plans leaves), restore with "
+            "strict=False and recompute the missing leaves, or use "
+            "repro.train.state.restore_state which migrates and re-encodes "
+            "plans automatically.")
     out = []
     for (kp, ref), sh in zip(flat, sh_flat):
-        e = by_path[jax.tree_util.keystr(kp)]
+        e = by_path.get(jax.tree_util.keystr(kp))
+        if e is None:                    # strict=False: keep target's value
+            out.append(jax.device_put(ref, sh) if sh is not None else ref)
+            continue
         arr = np.load(d / e["file"])
         if arr.dtype.kind == "V":   # np.load loses ml_dtypes names (bf16)
             arr = arr.view(_np_dtype(e["dtype"]))

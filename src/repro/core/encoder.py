@@ -17,14 +17,19 @@ engine and the LM/transformer stack), instead of per-caller helpers:
 
   - ``"period"``    — re-encode every ``schedule.refresh_every`` steps
     (the PR-2 behavior; the paper's once-per-iteration encode at k=1);
-  - ``"on_change"`` — re-encode only when an ig/og argmax actually flipped
-    (detected via ``sig``). The paper's masks churn early and freeze late,
-    so change-driven refresh matches per-step re-encoding exactly while
-    masks move and costs one cheap hash once they freeze;
+  - ``"on_change"`` — re-encode only when the balanced-deal layout
+    actually moved (detected via ``sig``, which hashes the ig/og argmaxes
+    *and* the within-group confidence ranks — so ``slack > 1`` spill-order
+    drift fires a refresh too, not just argmax flips). The paper's masks
+    churn early and freeze late, so change-driven refresh matches per-step
+    re-encoding exactly while masks move and costs one signature pass —
+    one sort + a segmented count per side, ~half an encode — once they
+    freeze. Exactness frontier; a coarse ``"period"`` buys more
+    throughput with the staleness it tolerates (fig12);
   - ``"hybrid"``    — on change, with ``refresh_every`` as a staleness
-    bound (covers spill-order drift: the balanced layout's overflow order
-    depends on preference *strengths*, which can move without flipping an
-    argmax).
+    bound (belt-and-suspenders against hash collisions; before the
+    signature hashed placement ranks it was the only mode that bounded
+    spill-order staleness).
 """
 from __future__ import annotations
 
@@ -47,9 +52,11 @@ class PlanState(NamedTuple):
     ``plans`` mirrors the params nesting with a GroupPlan at every
     FLGW-carrying projection (``{}`` when the grouped path is off — the
     empty state keeps training-loop carries structurally uniform).
-    ``sig`` is a uint32 hash of the ig/og argmaxes (:func:`plan_signature`):
-    any single argmax flip changes it, so ``sig`` equality certifies the
-    cached plans still describe the current mask's group structure.
+    ``sig`` is a uint32 hash of the grouping layout (:func:`plan_signature`):
+    any single argmax flip — and any within-group confidence reorder, which
+    moves slots/spills under ``slack > 1`` — changes it, so ``sig``
+    equality certifies the cached plans are still bitwise-identical to a
+    fresh encode of the current grouping matrices.
     """
     plans: Any
     sig: jax.Array
@@ -62,24 +69,60 @@ def empty_state() -> PlanState:
     return PlanState({}, jnp.zeros((), jnp.uint32))
 
 
-def plan_signature(params: dict) -> jax.Array:
-    """uint32 hash of every FLGW layer's ig/og argmax index vectors.
+def _layout_ranks(scores: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(pref, rank) of one grouping side; ``scores``: (..., M, G).
 
-    Each index gets an odd per-position weight and layers fold with an odd
-    multiplier, so flipping any single argmax always changes the hash
-    (odd · nonzero ≠ 0 mod 2^32); simultaneous multi-flip cancellation is
-    the only collision mode and is vanishingly unlikely.
+    ``pref`` is each item's argmax group; ``rank`` is the item's position
+    *within its preferred group* under the (strength desc, index asc)
+    order — together they determine the balanced deal's placement order
+    (pref asc, strength desc, index asc; see ``plan_encode.ref``) and
+    therefore the compact layout bitwise: a strength reorder inside one
+    group permutes slots and redirects which overflow item spills
+    (``slack > 1``), even when no argmax flips.
+
+    Cost matters — on_change evaluates this every step, so it must stay
+    well under one encode: one stable argsort, a segmented count via
+    cumsum (O(M·G)), and a scatter back to item order — cheaper than the
+    encode's own lexsort-equivalent two-sort pipeline.
+    """
+    g = scores.shape[-1]
+    pref = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    strength = jnp.max(scores, axis=-1)
+    order = jnp.argsort(-strength, axis=-1, stable=True)   # ties: index asc
+    pref_sorted = jnp.take_along_axis(pref, order, axis=-1)
+    # Within-group rank of each sorted position: running count of earlier
+    # same-group items in strength order.
+    cnt = jnp.cumsum(jax.nn.one_hot(pref_sorted, g, dtype=jnp.int32),
+                     axis=-2)
+    rank_sorted = jnp.take_along_axis(
+        cnt, pref_sorted[..., None], axis=-1)[..., 0] - 1
+    rank = jnp.put_along_axis(jnp.zeros_like(rank_sorted), order,
+                              rank_sorted, axis=-1, inplace=False)
+    return pref, rank
+
+
+def plan_signature(params: dict) -> jax.Array:
+    """uint32 hash of every FLGW layer's balanced-deal layout.
+
+    Hashes, per layer and grouping side, the argmax index vector *and*
+    the placement-rank vector (:func:`_layout_ranks`), so the signature
+    changes iff a fresh encode would produce a bitwise-different plan —
+    argmax flips and ``slack > 1`` spill-order drift alike. Each value
+    gets an odd per-position weight and layers fold with an odd
+    multiplier, so any single change moves the hash
+    (odd · nonzero ≠ 0 mod 2^32); simultaneous multi-change cancellation
+    is the only collision mode and is vanishingly unlikely.
     """
     h = jnp.zeros((), jnp.uint32)
     salt = 1
     for _, p in grouped.iter_flgw_layers(params):
-        for idx in (jnp.argmax(p["ig"], axis=-1),
-                    jnp.argmax(p["og"], axis=-2)):
-            v = idx.astype(jnp.uint32).reshape(-1)
-            w = (jnp.arange(v.shape[0], dtype=jnp.uint32)
-                 * jnp.uint32(_MIX) + jnp.uint32(salt)) | jnp.uint32(1)
-            h = h * jnp.uint32(_FOLD) + jnp.sum((v + jnp.uint32(1)) * w)
-            salt += 2
+        for scores in (p["ig"], jnp.swapaxes(p["og"], -1, -2)):
+            for idx in _layout_ranks(scores):
+                v = idx.astype(jnp.uint32).reshape(-1)
+                w = (jnp.arange(v.shape[0], dtype=jnp.uint32)
+                     * jnp.uint32(_MIX) + jnp.uint32(salt)) | jnp.uint32(1)
+                h = h * jnp.uint32(_FOLD) + jnp.sum((v + jnp.uint32(1)) * w)
+                salt += 2
     return h
 
 

@@ -105,9 +105,13 @@ def build_cell(cfg, shape_name: str, mesh, *, banded: bool = False,
         jf = jax.jit(fn, in_shardings=(param_sh, in_batch_shardings))
         return jf, (aparams, inputs)
 
-    # decode: one new token against a seq-length cache
+    # decode: one new token against a seq-length cache. The cache carries
+    # the serving PlanState beside the KV/SSM buffers on the grouped path
+    # (init_cache(params=...)), so the compiled decode program runs the
+    # flgw_matmul kernel against amortized metadata — no per-step encode.
     acache = jax.eval_shape(
-        lambda: transformer.init_cache(cfg, batch, seq))
+        lambda p: transformer.init_cache(cfg, batch, seq, params=p),
+        aparams)
     cache_sh = partition.constrained_shardings(
         transformer.cache_specs(cfg), acache, mesh, rules)
     fn = step_lib.make_serve_step(cfg, banded=banded,

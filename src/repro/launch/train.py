@@ -72,7 +72,13 @@ def train_lm(arch: str, *, smoke: bool = True, steps: int = 20,
         start = 0
         if ckpt_dir:
             runner = StepRunner(step_fn, ckpt_dir, save_every=save_every)
-            state, start = runner.restore_or(state, shardings=state_sh)
+            # Plans-aware restore: migrates pre-plans grouped manifests and
+            # re-encodes TrainState.plans from the restored params, so the
+            # resumed step is bitwise-identical under any refresh mode.
+            state, start = runner.restore_or(
+                state, shardings=state_sh,
+                restore_fn=lambda s, sh: state_lib.restore_state(
+                    ckpt_dir, s, cfg, shardings=sh))
         batches = make_batch_iterator(ds, start_step=start,
                                       sharding=batch_sh)
 

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.flgw import FLGWConfig
-from repro.models.layers import dense_init, proj, rope, softcap
+from repro.models.layers import dense_init, plan_of, proj, rope, softcap
 
 NEG_INF = -2.3819763e38  # == jnp.finfo(jnp.float32).min-ish, matches XLA
 
@@ -83,7 +83,7 @@ def attention(p, x, positions, cfg, *, window: int = 0, causal: bool = True,
               cache: Optional[dict] = None, q_chunk: int = 512,
               banded: bool = False, flash: bool = False,
               core_identity: bool = False,
-              flgw: Optional[FLGWConfig] = None):
+              flgw: Optional[FLGWConfig] = None, plans=None):
     """Returns (out, new_cache).
 
     * training/prefill: ``cache is None`` — full-sequence, query-chunked.
@@ -91,13 +91,20 @@ def attention(p, x, positions, cfg, *, window: int = 0, causal: bool = True,
       ``cache["pos"]`` and attend over the cache.
     * cross-attention: ``kv_x`` given — keys/values from the encoder stream,
       no causal mask, no RoPE on k (positions of memory are absolute).
+
+    ``plans``: this attention layer's entry of a cached PlanState — one
+    GroupPlan per q/k/v/o projection on the FLGW grouped path (None falls
+    back to per-call re-encoding inside ``proj``).
     """
     b, s, _ = x.shape
     hd, n_kv, qpk = cfg.head_dim, cfg.n_kv_heads, cfg.q_per_kv
-    q = proj(p["q"], x, flgw).reshape(b, s, n_kv, qpk, hd)
+    q = proj(p["q"], x, flgw, plan=plan_of(plans, "q")
+             ).reshape(b, s, n_kv, qpk, hd)
     src = x if kv_x is None else kv_x
-    k = proj(p["k"], src, flgw).reshape(b, src.shape[1], n_kv, hd)
-    v = proj(p["v"], src, flgw).reshape(b, src.shape[1], n_kv, hd)
+    k = proj(p["k"], src, flgw, plan=plan_of(plans, "k")
+             ).reshape(b, src.shape[1], n_kv, hd)
+    v = proj(p["v"], src, flgw, plan=plan_of(plans, "v")
+             ).reshape(b, src.shape[1], n_kv, hd)
 
     if kv_x is None:
         q = rope(q.reshape(b, s, n_kv * qpk, hd), positions,
@@ -129,7 +136,7 @@ def attention(p, x, positions, cfg, *, window: int = 0, causal: bool = True,
                      prefix_len=prefix_len, k_valid=k_valid[None])
         out = _attend(q, ck, cv, mask, cfg)
         out = out.reshape(b, s, n_kv * qpk * hd)
-        return proj(p["o"], out, flgw), new_cache
+        return proj(p["o"], out, flgw, plan=plan_of(plans, "o")), new_cache
 
     if core_identity and cache is None:
         # Dry-run cost variant: skip ONLY the attention core (projections,
@@ -137,7 +144,7 @@ def attention(p, x, positions, cfg, *, window: int = 0, causal: bool = True,
         # normal one isolates the core's HLO contribution, which the flash
         # accounting replaces with the fused-kernel analytic model.
         out = q.reshape(b, s, -1)
-        return proj(p["o"], out, flgw), None
+        return proj(p["o"], out, flgw, plan=plan_of(plans, "o")), None
 
     # Training / prefill: fused Pallas path when applicable (self-attention,
     # positions are the plain 0..S-1 ramp, no bidirectional prefix). The
@@ -150,7 +157,7 @@ def attention(p, x, positions, cfg, *, window: int = 0, causal: bool = True,
         of = flash_attention(qf, kf, vf, True, window,
                              float(cfg.attn_softcap), None, 512, 512, None)
         out = of.transpose(0, 2, 1, 3).reshape(b, s, -1)
-        return proj(p["o"], out, flgw), None
+        return proj(p["o"], out, flgw, plan=plan_of(plans, "o")), None
 
     # Training / prefill: scan over query chunks for bounded memory.
     t = src.shape[1]
@@ -159,7 +166,7 @@ def attention(p, x, positions, cfg, *, window: int = 0, causal: bool = True,
         mask = _mask(positions, k_pos_full, causal=causal and kv_x is None,
                      window=window, prefix_len=prefix_len)
         out = _attend(q, k, v, mask, cfg)
-        return proj(p["o"], out.reshape(b, s, -1), flgw), None
+        return proj(p["o"], out.reshape(b, s, -1), flgw, plan=plan_of(plans, "o")), None
 
     if s % q_chunk != 0:   # e.g. VLM prefix extends S; pick a clean divisor
         q_chunk = next(c for c in range(q_chunk, 0, -1) if s % c == 0)
@@ -192,4 +199,4 @@ def attention(p, x, positions, cfg, *, window: int = 0, causal: bool = True,
     idx = jnp.arange(n_chunks, dtype=jnp.int32)
     _, outs = jax.lax.scan(body, None, (idx, qc, pc))
     out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, -1)
-    return proj(p["o"], out, flgw), None
+    return proj(p["o"], out, flgw, plan=plan_of(plans, "o")), None

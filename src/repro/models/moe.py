@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.flgw import FLGWConfig, init_grouping
-from repro.models.layers import proj
+from repro.models.layers import plan_of, proj
 
 
 def moe_init(key, cfg, *, flgw: Optional[FLGWConfig] = None):
@@ -60,22 +60,32 @@ def moe_init(key, cfg, *, flgw: Optional[FLGWConfig] = None):
     return params, specs
 
 
-def _expert_ffn(p, xe, flgw):
-    """xe: (E, C, d) -> (E, C, d), per-expert gated MLP."""
+def _expert_ffn(p, xe, flgw, plans=None):
+    """xe: (E, C, d) -> (E, C, d), per-expert gated MLP.
+
+    ``plans``: the layer's plan subtree — (E,)-stacked GroupPlans per
+    up/gate/down projection, vmapped alongside the stacked expert params.
+    """
     if flgw is not None and flgw.enabled and "ig" in p["up"]:
-        def one(pu, pg, pd, x):
-            up = proj(pu, x, flgw)
-            up = jax.nn.gelu(proj(pg, x, flgw)) * up
-            return proj(pd, up, flgw)
-        return jax.vmap(one)(p["up"], p["gate"], p["down"], xe)
+        def one(pu, pg, pd, x, pl):
+            up = proj(pu, x, flgw, plan=plan_of(pl, "up"))
+            up = jax.nn.gelu(proj(pg, x, flgw, plan=plan_of(pl, "gate"))) * up
+            return proj(pd, up, flgw, plan=plan_of(pl, "down"))
+        if plans:
+            return jax.vmap(one)(p["up"], p["gate"], p["down"], xe, plans)
+        return jax.vmap(lambda pu, pg, pd, x: one(pu, pg, pd, x, None))(
+            p["up"], p["gate"], p["down"], xe)
     up = jnp.einsum("ecd,edf->ecf", xe, p["up"]["w"])
     gate = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, p["gate"]["w"]))
     return jnp.einsum("ecf,efd->ecd", up * gate, p["down"]["w"])
 
 
 def moe(p, x, cfg, *, flgw: Optional[FLGWConfig] = None,
-        dropless: bool = False):
+        dropless: bool = False, plans=None):
     """x: (B, S, d) -> (B, S, d). Returns (out, aux_loss).
+
+    ``plans``: this MoE layer's entry of a cached PlanState (per-expert
+    stacked GroupPlans; None falls back to per-call re-encoding).
 
     ``dropless=True`` sets per-expert capacity to the worst case (t·k) so
     no token is ever dropped — used on the decode path, where a dropped
@@ -122,7 +132,7 @@ def moe(p, x, cfg, *, flgw: Optional[FLGWConfig] = None,
 
     xe = jnp.take(xf, jnp.minimum(tok_of_slot, t - 1), axis=0)
     xe = jnp.where((tok_of_slot < t)[:, None], xe, 0).reshape(e, cap, d)
-    ye = _expert_ffn(p, xe, flgw).reshape(e * cap, d)
+    ye = _expert_ffn(p, xe, flgw, plans).reshape(e * cap, d)
     ye = ye * w_of_slot[:, None].astype(ye.dtype)
 
     out = (jnp.zeros((t + 1, d), x.dtype)

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.flgw import FLGWConfig
-from repro.models.layers import dense_init, proj, rmsnorm
+from repro.models.layers import dense_init, plan_of, proj, rmsnorm
 
 
 def ssm_init(key, cfg, *, flgw: Optional[FLGWConfig] = None):
@@ -120,11 +120,17 @@ def ssm_step(hstate, x_t, b_t, c_t, dt_t, a_neg):
 
 
 def ssm(p, x, cfg, *, cache: Optional[dict] = None, chunk: int = 256,
-        flgw: Optional[FLGWConfig] = None, unroll: bool = False):
-    """Mamba2 block. x: (B, S, d). Returns (out, new_cache)."""
+        flgw: Optional[FLGWConfig] = None, unroll: bool = False,
+        plans=None):
+    """Mamba2 block. x: (B, S, d). Returns (out, new_cache).
+
+    ``plans``: this layer's entry of a cached PlanState — GroupPlans for
+    the ``in``/``out`` projections on the FLGW grouped path (None falls
+    back to per-call re-encoding inside ``proj``).
+    """
     b, s, d = x.shape
     di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
-    zxbcdt = proj(p["in"], x, flgw)
+    zxbcdt = proj(p["in"], x, flgw, plan=plan_of(plans, "in"))
     z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
     a_neg = -jnp.exp(p["A_log"])                                 # (H,)
@@ -157,4 +163,4 @@ def ssm(p, x, cfg, *, cache: Optional[dict] = None, chunk: int = 256,
              .astype(jnp.float32)).astype(y.dtype)
     y = y.reshape(b, s, di)
     y = rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype))
-    return proj(p["out"], y, flgw), new_cache
+    return proj(p["out"], y, flgw, plan=plan_of(plans, "out")), new_cache

@@ -132,8 +132,10 @@ def _slot_apply(p, x, positions, cfg: ModelConfig, slot: SlotSpec, *,
                 q_chunk=512, banded=False, ssd_unroll=False,
                 moe_dropless=False, attn_identity=False, plans=None):
     """``plans``: this slot's entry of the (sliced) PlanState — cached
-    FLGW metadata for the ``ffn`` projections. Mixer/MoE FLGW targets fall
-    back to per-call re-encoding (plan=None) until they grow plan threading.
+    FLGW metadata for *every* FLGW target the slot carries: the
+    attention/SSM mixer, the cross-attention, the MoE experts and the
+    ``ffn`` projections all consume their own plan subtree, so no mixer
+    ever falls back to per-call re-encoding when a PlanState is supplied.
     """
     aux = jnp.zeros((), jnp.float32)
     new_cache = {}
@@ -146,14 +148,16 @@ def _slot_apply(p, x, positions, cfg: ModelConfig, slot: SlotSpec, *,
             p["mixer"], h, positions, cfg, window=slot.window,
             causal=slot.causal, prefix_len=prefix_len, cache=c,
             q_chunk=q_chunk, banded=banded, flash=cfg.use_flash,
-            core_identity=attn_identity, flgw=_flgw_cfg(cfg, "attn"))
+            core_identity=attn_identity, flgw=_flgw_cfg(cfg, "attn"),
+            plans=plan_of(plans, "mixer"))
         if nc is not None:
             new_cache.update({"k": nc["k"], "v": nc["v"]})
     else:
         h, nc = ssm_mod.ssm(p["mixer"], h, cfg, cache=cache and
                             {"state": cache["state"], "conv": cache["conv"]},
                             chunk=cfg.ssm_chunk,
-                            flgw=_flgw_cfg(cfg, "ssm"), unroll=ssd_unroll)
+                            flgw=_flgw_cfg(cfg, "ssm"), unroll=ssd_unroll,
+                            plans=plan_of(plans, "mixer"))
         if nc is not None:
             new_cache.update(nc)
     x = x + h
@@ -161,7 +165,8 @@ def _slot_apply(p, x, positions, cfg: ModelConfig, slot: SlotSpec, *,
         h = rmsnorm(p["norm_x"], x, cfg.norm_eps)
         h, _ = attn_mod.attention(
             p["cross"], h, positions, cfg, causal=False, kv_x=encoder_out,
-            q_chunk=q_chunk, flgw=_flgw_cfg(cfg, "attn"))
+            q_chunk=q_chunk, flgw=_flgw_cfg(cfg, "attn"),
+            plans=plan_of(plans, "cross"))
         x = x + h
     if slot.ffn == "none":     # pure-SSM blocks (mamba2) have no FFN
         return x, aux, new_cache
@@ -171,7 +176,8 @@ def _slot_apply(p, x, positions, cfg: ModelConfig, slot: SlotSpec, *,
                 plans=plan_of(plans, "ffn"))
     else:
         h, a = moe_mod.moe(p["moe"], h, cfg, flgw=_flgw_cfg(cfg, "moe"),
-                           dropless=moe_dropless or cache is not None)
+                           dropless=moe_dropless or cache is not None,
+                           plans=plan_of(plans, "moe"))
         aux = aux + a
         if slot.ffn == "moe_dense":
             h = h + mlp(p["ffn"], rmsnorm(p["norm2"], x, cfg.norm_eps),
@@ -246,12 +252,17 @@ def lm_apply(params, cfg: ModelConfig, tokens, positions, *,
     frames: (B, T, d) audio-stub encoder input (whisper).
     cache: decode caches from ``init_cache``.
     plans: cached FLGW metadata from :func:`encode_plans` (PlanState or its
-    raw dict); None falls back to per-projection re-encoding on the
-    grouped path.
+    raw dict). When None, a ``plans`` entry riding the decode cache (see
+    ``init_cache(..., params=...)``) is consumed instead — the serving
+    contract: the PlanState lives beside the KV/SSM caches, encoded once
+    at prefill and reused by every decode step. With neither, the grouped
+    path falls back to per-projection re-encoding.
     return_hidden: skip unembedding — the training loss computes logits in
     sequence chunks (the full (B, S, vocab) tensor at 256k vocab never fits).
     """
     remat = cfg.remat if remat is None else remat
+    if plans is None and cache is not None:
+        plans = cache.get("plans")
     if isinstance(plans, planenc.PlanState):
         plans = plans.plans
     plans = plans or {}
@@ -300,6 +311,10 @@ def lm_apply(params, cfg: ModelConfig, tokens, positions, *,
     new_cache = None
     if cache is not None:
         new_cache = {"pos": pos + tokens.shape[1], "blocks": new_slot_caches}
+        if "plans" in cache:
+            # plans ride the cache unchanged — params are frozen while
+            # serving, so there is nothing to refresh
+            new_cache["plans"] = cache["plans"]
         if encoder_out is not None:
             new_cache["encoder_out"] = encoder_out
     return out, aux, new_cache
@@ -319,8 +334,17 @@ def _cache_len(slot: SlotSpec, max_seq: int) -> int:
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
-               dtype=None) -> dict:
-    """Decode caches, stacked (n_blocks, ...) per slot."""
+               dtype=None, *, params=None) -> dict:
+    """Decode caches, stacked (n_blocks, ...) per slot.
+
+    ``params``: pass the model params to cache a :class:`~repro.core.
+    encoder.PlanState` beside the KV/SSM caches (``cache["plans"]``) on
+    the FLGW grouped path — the one-encode-per-serve contract: prefill
+    builds the plans here, every decode step consumes them through
+    ``lm_apply``, and they ride the returned cache unchanged. Without
+    params (or off the grouped path) ``cache["plans"]`` is ``()`` and
+    grouped projections fall back to per-call re-encoding.
+    """
     dtype = dtype or cfg.dtype
     nb = cfg.n_blocks
     blocks = {}
@@ -339,10 +363,29 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
                 "conv": jnp.zeros((nb, batch, cfg.conv_width - 1, conv_ch),
                                   dtype)}
     cache = {"pos": jnp.zeros((), jnp.int32), "blocks": blocks}
+    plans = ()
+    if params is not None:
+        state = encode_plans(params, cfg)
+        if state.plans:               # grouped path: PlanState beside the KV
+            plans = state
+    cache["plans"] = plans
     if cfg.encoder_layers:
         cache["encoder_out"] = jnp.zeros(
             (batch, cfg.num_frames, cfg.d_model), dtype)
     return cache
+
+
+def plan_specs(cfg: ModelConfig):
+    """Logical spec tree of the stack's cached PlanState (replicated: the
+    compact metadata is small int/bool tensors consumed whole by every
+    shard). ``()`` off the grouped path — matching ``init_cache`` /
+    ``TrainState.plans``."""
+    if cfg.flgw_groups <= 1 or cfg.flgw_path != "grouped":
+        return ()
+    aplans = jax.eval_shape(
+        lambda k: encode_plans(lm_init(k, cfg)[0], cfg),
+        jax.random.PRNGKey(0))
+    return jax.tree.map(lambda a: (None,) * a.ndim, aplans)
 
 
 def cache_specs(cfg: ModelConfig) -> dict:
@@ -363,7 +406,7 @@ def cache_specs(cfg: ModelConfig) -> dict:
             blocks[f"slot{i}"] = {
                 "state": ("layers", "batch", "heads", None, None),
                 "conv": ("layers", "batch", None, "ffn")}
-    specs = {"pos": (), "blocks": blocks}
+    specs = {"pos": (), "blocks": blocks, "plans": plan_specs(cfg)}
     if cfg.encoder_layers:
         specs["encoder_out"] = ("batch", None, None)
     return specs

@@ -87,11 +87,20 @@ class StepRunner:
         self.keep = keep
         self.guard = guard or PreemptionGuard()
 
-    def restore_or(self, state, shardings=None):
-        """Resume from the latest checkpoint if one exists."""
+    def restore_or(self, state, shardings=None, restore_fn=None):
+        """Resume from the latest checkpoint if one exists.
+
+        ``restore_fn(state, shardings) -> (state, step)`` overrides the
+        plain full-tree restore — the TrainState path passes
+        ``repro.train.state.restore_state`` here so derived leaves
+        (cached FLGW plans) are re-encoded from the restored params
+        rather than loaded stale, and pre-plans manifests migrate.
+        """
         latest = self._ckpt.latest_step(self.ckpt_dir)
         if latest is None:
             return state, 0
+        if restore_fn is not None:
+            return restore_fn(state, shardings)
         state, step = self._ckpt.restore_checkpoint(
             self.ckpt_dir, state, shardings=shardings)
         return state, step

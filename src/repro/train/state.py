@@ -66,14 +66,9 @@ def param_specs(cfg: ModelConfig):
 
 def plan_specs(cfg: ModelConfig):
     """Logical spec tree of the cached PlanState (replicated: the compact
-    metadata is small int/bool tensors consumed whole by every shard)."""
-    if not _uses_plans(cfg):
-        return ()
-    aplans = jax.eval_shape(
-        lambda k: transformer.encode_plans(transformer.lm_init(k, cfg)[0],
-                                           cfg),
-        jax.random.PRNGKey(0))
-    return jax.tree.map(lambda a: (None,) * a.ndim, aplans)
+    metadata is small int/bool tensors consumed whole by every shard).
+    Shared with the serving cache — see ``transformer.plan_specs``."""
+    return transformer.plan_specs(cfg)
 
 
 def state_specs(cfg: ModelConfig, *, optimizer: str = "adamw"):
@@ -92,3 +87,39 @@ def abstract_state(cfg: ModelConfig, *, optimizer: str = "adamw"):
     return jax.eval_shape(
         lambda k: init_state(k, cfg, optimizer=optimizer),
         jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint restore (plans-aware)
+# ---------------------------------------------------------------------------
+
+def reencode_plans(state: TrainState, cfg: ModelConfig) -> TrainState:
+    """Fresh plans from the state's own params (no-op off the grouped
+    path). Restoring params and then calling this makes a restore
+    invariant to the refresh mode and to whatever plans (stale, absent,
+    or pre-plans-era) the checkpoint carried."""
+    if not _uses_plans(cfg):
+        return state
+    return state._replace(plans=transformer.encode_plans(state.params, cfg))
+
+
+def restore_state(ckpt_dir, state: TrainState, cfg: ModelConfig, *,
+                  shardings=None, step=None) -> tuple[TrainState, int]:
+    """Restore a :class:`TrainState`, re-encoding plans from the restored
+    params instead of loading them.
+
+    Two bugs this kills at once: (1) pre-plans grouped manifests have no
+    ``plans`` leaves, so a naive full-tree restore raises — dropping the
+    plans from the restore *target* migrates those checkpoints for free;
+    (2) even plans-era checkpoints hold the plans that were current at
+    save time, which may be stale relative to the refresh policy — the
+    post-restore re-encode makes the first resumed step bitwise-identical
+    to an uninterrupted run under any refresh mode.
+    """
+    from repro import checkpoint as ckpt
+    target = state._replace(plans=())
+    if shardings is not None and hasattr(shardings, "_replace"):
+        shardings = shardings._replace(plans=())
+    restored, s = ckpt.restore_checkpoint(ckpt_dir, target,
+                                          shardings=shardings, step=step)
+    return reencode_plans(restored, cfg), s

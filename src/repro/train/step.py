@@ -5,7 +5,9 @@ step: forward (remat-scanned blocks, chunked CE), backward, optional
 microbatch gradient accumulation (scan), global-norm clip, optimizer update.
 ``make_serve_step(cfg)`` returns a single-token decode step against the KV /
 SSM caches; ``make_prefill_step(cfg)`` the full-sequence forward used by the
-prefill shape cells.
+prefill shape cells. Both are plan-aware on the FLGW grouped path: the
+serving PlanState lives *beside* the KV cache (``transformer.init_cache(...,
+params=...)``), encoded once and consumed by every decode step.
 
 Everything is shape-static: the dry-run lowers these exact functions against
 ShapeDtypeStructs, and the real launcher jits them with the same shardings.
@@ -131,7 +133,16 @@ def make_train_step(cfg: ModelConfig, *, optimizer: str = "adamw",
 def make_serve_step(cfg: ModelConfig, *, banded: bool = False,
                     unroll_blocks: bool = False):
     """Returns ``serve_step(params, cache, tokens, positions)`` —
-    one-token greedy decode against the cache (the decode shape cells)."""
+    one-token greedy decode against the cache (the decode shape cells).
+
+    On the FLGW grouped path the cache carries the serving PlanState
+    (``init_cache(..., params=...)``): ``lm_apply`` consumes
+    ``cache["plans"]`` for every FLGW projection — mixers included — and
+    threads it through to the returned cache, so the grouped Pallas
+    kernel runs inside the decode loop against amortized metadata with
+    zero ``make_plan`` work per step (params are frozen while serving;
+    nothing to refresh).
+    """
 
     def serve_step(params, cache, tokens, positions):
         logits, _, cache = transformer.lm_apply(
@@ -148,19 +159,28 @@ def make_prefill_step(cfg: ModelConfig, *, banded: bool = False,
                       ssd_unroll: bool = False,
                       unroll_blocks: bool = False,
                       attn_identity: bool = False):
-    """Returns ``prefill(params, tokens, positions, ...) -> last logits`` —
-    the full-sequence forward of the prefill shape cells."""
+    """Returns ``prefill(params, batch, plans=None) -> last logits`` —
+    the full-sequence forward of the prefill shape cells.
 
-    def prefill_step(params, batch):
+    On the FLGW grouped path the prefill encodes the PlanState *once*
+    (or reuses a caller-supplied one — e.g. the plans already cached
+    beside the KV cache) and every projection of the whole forward
+    consumes it; without the cached state each grouped projection would
+    re-encode its own plan per call.
+    """
+    def prefill_step(params, batch, plans=None):
         s = batch["tokens"].shape[1]
         qc = q_chunk or pick_q_chunk(s)
+        if plans is None:
+            # empty PlanState (a no-op) off the grouped path
+            plans = transformer.encode_plans(params, cfg)
         hidden, _, _ = transformer.lm_apply(
             params, cfg, batch["tokens"], batch["positions"],
             patch_embeds=batch.get("patch_embeds"),
             frames=batch.get("frames"),
             q_chunk=qc, banded=banded, remat=False, return_hidden=True,
             ssd_unroll=ssd_unroll, unroll_blocks=unroll_blocks,
-            moe_dropless=True, attn_identity=attn_identity)
+            moe_dropless=True, attn_identity=attn_identity, plans=plans)
         # Only the last position's logits are needed to start decoding.
         from repro.models.layers import softcap, unembed
         logits = unembed(params["embed"], hidden[:, -1:])

@@ -1,0 +1,100 @@
+"""Pre-PR-3-style grouped checkpoint fixture: generator + restore smoke.
+
+Before PR 3, ``TrainState`` had no ``plans`` field, so grouped checkpoints
+recorded only ``params``/``opt``/``step`` leaves. Restoring one into a
+modern grouped ``TrainState`` (whose target tree carries GroupPlan leaves)
+used to raise ``KeyError``; ``repro.train.state.restore_state`` now
+migrates such manifests and re-encodes the plans from the restored params.
+
+The checked-in fixture lives next to this file
+(``prepr3_grouped_ckpt/``) and is what the CI restore-migration smoke and
+``tests/test_restore.py`` restore from. Saving ``state._replace(plans=())``
+produces a manifest byte-layout-identical to the pre-PR-3 era — the empty
+tuple contributes no leaves.
+
+Regenerate (after a param-tree change) with:
+
+    PYTHONPATH=src python tests/fixtures/prepr3_ckpt.py --write
+
+Run the restore-migration smoke (what CI does) with:
+
+    PYTHONPATH=src python tests/fixtures/prepr3_ckpt.py --smoke
+"""
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+
+FIXTURE_DIR = pathlib.Path(__file__).resolve().parent / "prepr3_grouped_ckpt"
+FIXTURE_STEP = 2
+SEED = 7
+
+
+def tiny_cfg():
+    """The grouped LM config the fixture was saved from (mixer FLGW on)."""
+    from repro.models.config import ModelConfig
+    return ModelConfig(
+        name="prepr3_fixture", family="dense", n_layers=2, d_model=32,
+        n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64, vocab=64,
+        flgw_groups=4, flgw_path="grouped", flgw_targets=("mlp", "attn"),
+        dtype=jnp.float32, remat=False)
+
+
+def init_fixture_state():
+    from repro.train import state as state_lib
+    return state_lib.init_state(jax.random.PRNGKey(SEED), tiny_cfg(),
+                                optimizer="rmsprop")
+
+
+def write_fixture(ckpt_dir=FIXTURE_DIR) -> str:
+    """Save the pre-PR-3-shaped checkpoint (no plans leaves)."""
+    from repro.checkpoint import save_checkpoint
+    state = init_fixture_state()
+    state = state._replace(plans=(),
+                           step=jnp.full((), FIXTURE_STEP, jnp.int32))
+    path = save_checkpoint(ckpt_dir, FIXTURE_STEP, state)
+    print(f"wrote pre-plans grouped fixture at {path}")
+    return path
+
+
+def restore_smoke(ckpt_dir=FIXTURE_DIR) -> None:
+    """Restore the fixture through the migrating path and sanity-check."""
+    import numpy as np
+
+    from repro.core import encoder
+    from repro.core.flgw import FLGWConfig
+    from repro.train import state as state_lib
+
+    cfg = tiny_cfg()
+    target = init_fixture_state()
+    restored, step = state_lib.restore_state(ckpt_dir, target, cfg)
+    assert step == FIXTURE_STEP, step
+    assert int(restored.step) == FIXTURE_STEP, restored.step
+    assert isinstance(restored.plans, encoder.PlanState), type(restored.plans)
+    fresh = encoder.encode_plans(
+        restored.params, FLGWConfig(groups=cfg.flgw_groups,
+                                    path=cfg.flgw_path))
+    for a, b in zip(jax.tree.leaves(restored.plans), jax.tree.leaves(fresh)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    n = sum(1 for _ in encoder.iter_flgw_layers(restored.params))
+    print(f"restore-migration smoke OK: step {step}, {n} FLGW layers "
+          "re-encoded from restored params")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true",
+                    help="(re)generate the checked-in fixture")
+    ap.add_argument("--smoke", action="store_true",
+                    help="restore the fixture via the migrating path")
+    ap.add_argument("--ckpt-dir", default=str(FIXTURE_DIR))
+    args = ap.parse_args(argv)
+    if args.write:
+        write_fixture(args.ckpt_dir)
+    if args.smoke or not args.write:
+        restore_smoke(args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -190,6 +190,56 @@ def test_schedule_rejects_unknown_refresh_mode():
         SparsitySchedule(groups=4, refresh="sometimes")
 
 
+def _spill_drift_pair():
+    """Two grouping-matrix sets whose argmaxes agree but whose balanced
+    layouts differ bitwise: group 0 is over capacity (6 rows, cap 5 at
+    slack 1.25), and swapping two rows' strengths changes which row is
+    least confident — i.e. which one spills."""
+    ig = np.zeros((8, 2), np.float32)
+    ig[:6, 0] = [9., 8., 7., 6., 5., 4.]
+    ig[6:, 1] = [3., 2.]
+    og = np.zeros((2, 8), np.float32)
+    og[0, :4] = 1.0
+    og[1, 4:] = 1.0
+    ig2 = ig.copy()
+    ig2[2, 0], ig2[5, 0] = 4., 7.          # strength swap, no argmax flip
+    old = {"enc": {"ig": jnp.asarray(ig), "og": jnp.asarray(og)}}
+    new = {"enc": {"ig": jnp.asarray(ig2), "og": jnp.asarray(og)}}
+    assert np.array_equal(np.argmax(ig, 1), np.argmax(ig2, 1))
+    return old, new
+
+
+def test_signature_catches_spill_order_drift():
+    """Regression (ROADMAP encoder follow-up): ``slack > 1`` overflow
+    order depends on preference *strengths* — a reorder without any
+    argmax flip moves the plan bitwise, and the layout-rank signature
+    must move with it."""
+    old, new = _spill_drift_pair()
+    plan_old = grouped.make_plan(old["enc"]["ig"], old["enc"]["og"],
+                                 FL.capacity_slack)
+    plan_new = grouped.make_plan(new["enc"]["ig"], new["enc"]["og"],
+                                 FL.capacity_slack)
+    assert not _tree_equal(plan_old, plan_new)      # the drift is real
+    assert np.asarray(encoder.plan_signature(old)) != \
+        np.asarray(encoder.plan_signature(new))
+
+
+def test_refresh_on_change_fires_on_spill_order_drift():
+    """on_change must re-encode on spill-order drift, not only on argmax
+    flips — the stale carried plan is bitwise-different from a fresh
+    encode of the drifted matrices."""
+    old, new = _spill_drift_pair()
+    state = encoder.encode_plans(old, FL)
+    sched = SparsitySchedule(groups=4, refresh_every=1000,
+                             refresh="on_change")
+    refresh = jax.jit(encoder.maybe_refresh,
+                      static_argnames=("cfg", "schedule"))
+    kept = refresh(old, state, 1, cfg=FL, schedule=sched)
+    assert _tree_equal(kept, state)                  # no drift -> reuse
+    fired = refresh(new, state, 2, cfg=FL, schedule=sched)
+    assert _tree_equal(fired, encoder.encode_plans(new, FL))
+
+
 # ---------------------------------------------------------------------------
 # LM decoder stack: cached plans end to end
 # ---------------------------------------------------------------------------
@@ -252,6 +302,56 @@ def test_lm_train_step_encodes_once_per_refresh(monkeypatch):
     monkeypatch.setattr(grouped, "make_plan", counting)
     jax.eval_shape(step, state, _lm_batch(cfg))
     assert calls["n"] == 3        # one encode per FLGW layer, in the cond
+
+
+def _counting_make_plan(monkeypatch):
+    calls = {"n": 0}
+    real = grouped.make_plan
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(grouped, "make_plan", counting)
+    return calls
+
+
+def test_serve_step_with_cached_planstate_never_traces_make_plan(
+        monkeypatch):
+    """The serving acceptance bar: with the PlanState beside the KV cache,
+    tracing the decode step hits make_plan zero times even when mixers
+    (attention here) are FLGW targets — no slot falls back to plan=None."""
+    cfg = _tiny_lm_cfg(flgw_targets=("mlp", "attn"), remat=False)
+    params, _ = transformer.lm_init(jax.random.PRNGKey(0), cfg)
+    cache = transformer.init_cache(cfg, 1, 8, params=params)
+    assert isinstance(cache["plans"], encoder.PlanState)
+    serve = step_lib.make_serve_step(cfg)
+    tok = jnp.zeros((1, 1), jnp.int32)
+    calls = _counting_make_plan(monkeypatch)
+    jax.eval_shape(serve, params, cache, tok, tok)
+    assert calls["n"] == 0
+
+    # the plan-less cache falls back to one encode per FLGW projection
+    bare = transformer.init_cache(cfg, 1, 8)
+    jax.eval_shape(serve, params, bare, tok, tok)
+    assert calls["n"] == 7        # q/k/v/o + up/gate/down
+
+
+def test_prefill_step_encodes_once_per_layer(monkeypatch):
+    """Prefill encodes the PlanState once (batched over blocks, one
+    make_plan per FLGW layer) and every projection consumes it; a
+    caller-supplied PlanState suppresses even that."""
+    cfg = _tiny_lm_cfg(flgw_targets=("mlp", "attn"), remat=False)
+    params, _ = transformer.lm_init(jax.random.PRNGKey(0), cfg)
+    plans = transformer.encode_plans(params, cfg)
+    prefill = step_lib.make_prefill_step(cfg)
+    batch = _lm_batch(cfg)
+    calls = _counting_make_plan(monkeypatch)
+    jax.eval_shape(prefill, params, batch)
+    assert calls["n"] == 7        # one per FLGW layer, not per projection
+    calls["n"] = 0
+    jax.eval_shape(prefill, params, batch, plans)
+    assert calls["n"] == 0
 
 
 def test_lm_train_step_runs_and_carries_plans():

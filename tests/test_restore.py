@@ -1,0 +1,137 @@
+"""Checkpoint restore of grouped TrainStates: pre-plans manifest migration,
+re-encode-on-restore invariance, and bitwise resume parity."""
+import importlib.util
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (manifest_paths, restore_checkpoint,
+                              save_checkpoint)
+from repro.core import encoder
+from repro.core.flgw import FLGWConfig
+from repro.core.schedule import SparsitySchedule
+from repro.train import state as state_lib
+from repro.train import step as step_lib
+
+_FIX = pathlib.Path(__file__).parent / "fixtures" / "prepr3_ckpt.py"
+_spec = importlib.util.spec_from_file_location("prepr3_ckpt", _FIX)
+prepr3 = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(prepr3)
+
+FL = FLGWConfig(groups=4, path="grouped")
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+def _batch(cfg, step, b=2, s=16):
+    k = jax.random.fold_in(jax.random.PRNGKey(99), step)
+    tok = jax.random.randint(k, (b, s), 0, cfg.vocab, jnp.int32)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    return {"tokens": tok, "targets": tok, "positions": pos}
+
+
+# ---------------------------------------------------------------------------
+# Pre-plans manifest migration
+# ---------------------------------------------------------------------------
+
+def test_checked_in_pre_plans_fixture_restores_and_reencodes():
+    """The checked-in pre-PR-3-style grouped checkpoint (manifest without
+    plans leaves) restores through ``restore_state`` and comes back with
+    plans freshly encoded from the restored params."""
+    cfg = prepr3.tiny_cfg()
+    target = prepr3.init_fixture_state()
+    restored, step = state_lib.restore_state(prepr3.FIXTURE_DIR, target, cfg)
+    assert step == prepr3.FIXTURE_STEP
+    assert isinstance(restored.plans, encoder.PlanState)
+    fresh = encoder.encode_plans(restored.params, FL)
+    assert _tree_equal(restored.plans, fresh)
+    # and the fixture really is pre-plans-shaped
+    assert not any(".plans" in p
+                   for p in manifest_paths(prepr3.FIXTURE_DIR))
+
+
+def test_strict_restore_of_pre_plans_manifest_raises_with_guidance():
+    target = prepr3.init_fixture_state()
+    with pytest.raises(KeyError, match="restore_state"):
+        restore_checkpoint(prepr3.FIXTURE_DIR, target)
+
+
+def test_non_strict_restore_keeps_unrecorded_target_leaves():
+    target = prepr3.init_fixture_state()
+    # poison a recorded leaf to prove it is loaded, not passed through
+    target = target._replace(step=jnp.full((), 42, jnp.int32))
+    got, step = restore_checkpoint(prepr3.FIXTURE_DIR, target, strict=False)
+    assert step == prepr3.FIXTURE_STEP
+    # plans leaves aren't in the manifest: target's own plans pass through
+    assert _tree_equal(got.plans, target.plans)
+    # recorded leaves come from the checkpoint, not the target
+    assert int(got.step) == prepr3.FIXTURE_STEP
+
+
+def test_pre_plans_roundtrip_migrates(tmp_path):
+    """Saving ``state._replace(plans=())`` reproduces the pre-PR-3 manifest
+    shape; restore_state migrates it."""
+    cfg = prepr3.tiny_cfg()
+    state = prepr3.init_fixture_state()
+    save_checkpoint(tmp_path, 4, state._replace(plans=()))
+    restored, step = state_lib.restore_state(tmp_path, state, cfg)
+    assert step == 4
+    assert _tree_equal(restored.params, state.params)
+    assert _tree_equal(restored.plans,
+                       encoder.encode_plans(restored.params, FL))
+
+
+# ---------------------------------------------------------------------------
+# Re-encode on restore (stale-plans bug)
+# ---------------------------------------------------------------------------
+
+def test_restore_reencodes_stale_checkpointed_plans(tmp_path):
+    """A plans-era checkpoint holds whatever plans were current at save
+    time; restore must not trust them. Poisoned plans in the checkpoint
+    come back as a fresh encode of the restored params."""
+    cfg = prepr3.tiny_cfg()
+    state = prepr3.init_fixture_state()
+    poisoned = state._replace(plans=encoder.PlanState(
+        jax.tree.map(jnp.zeros_like, state.plans.plans),
+        jnp.zeros((), jnp.uint32)))
+    save_checkpoint(tmp_path, 6, poisoned)
+    restored, _ = state_lib.restore_state(tmp_path, state, cfg)
+    assert _tree_equal(restored.plans,
+                       encoder.encode_plans(restored.params, FL))
+
+
+@pytest.mark.parametrize("refresh", ["on_change", "period"])
+def test_post_restore_step_bitwise_matches_uninterrupted(tmp_path, refresh):
+    """The acceptance bar: checkpoint at step k, restore, step once — the
+    resulting state is bitwise-identical to the run that never stopped,
+    for change-driven and periodic refresh alike (restore re-encodes, and
+    the layout-rank signature guarantees carried plans match a fresh
+    encode bitwise)."""
+    cfg = prepr3.tiny_cfg()
+    sched = SparsitySchedule(groups=4, refresh_every=2, refresh=refresh)
+    step_fn = jax.jit(step_lib.make_train_step(
+        cfg, optimizer="rmsprop", lr=1e-2, schedule=sched))
+    state = prepr3.init_fixture_state()
+    for t in range(2):
+        state, _ = step_fn(state, _batch(cfg, t))
+    save_checkpoint(tmp_path, 2, state)
+
+    cont, _ = step_fn(state, _batch(cfg, 2))           # never interrupted
+
+    target = prepr3.init_fixture_state()               # fresh process
+    restored, start = state_lib.restore_state(tmp_path, target, cfg)
+    assert start == 2
+    resumed, _ = step_fn(restored, _batch(cfg, 2))
+
+    assert _tree_equal(cont.params, resumed.params)
+    assert _tree_equal(cont.opt, resumed.opt)
+    assert _tree_equal(cont.plans, resumed.plans)
+    assert int(cont.step) == int(resumed.step) == 3
