@@ -80,13 +80,16 @@ def main() -> dict:
     return out
 
 
-def real_sweep(iterations: int = 24, hidden: int = 64) -> dict:
+def real_sweep(iterations: int = 24, hidden: int = 64,
+               mesh: tuple | None = None) -> dict:
     """Paper Fig. 11 sweeps measured on real ``train()`` runs.
 
     Each point runs the on-device scan (grouped path where G > 1, plan
     refresh every 4 iterations) and reads the throughput metrics the loop
     accumulates; the first half of each history (compile-heavy) is
-    discarded.
+    discarded. ``mesh=(env, agent)`` drives every point through the
+    ``jax.sharding`` mesh path instead of the single-device scan (the
+    batch stays the global batch — sharded, not multiplied).
     """
     from repro.core.schedule import SparsitySchedule
     from repro.marl import envs, ic3net
@@ -100,7 +103,7 @@ def real_sweep(iterations: int = 24, hidden: int = 64) -> dict:
         sched = (SparsitySchedule(groups=groups, refresh_every=4)
                  if groups > 1 else None)
         _, hist = train_mod.train(cfg, ecfg, train_mod.TrainConfig(
-            batch=batch), iterations=iterations, seed=0, env=env,
+            batch=batch, mesh=mesh), iterations=iterations, seed=0, env=env,
             schedule=sched, log_every=max(2, iterations // 4))
         tail = hist[len(hist) // 2:]
         mean = lambda key: sum(h[key] for h in tail) / len(tail)
@@ -109,9 +112,10 @@ def real_sweep(iterations: int = 24, hidden: int = 64) -> dict:
                 "sparse_gflops": mean("sparse_gflops"),
                 "mask_sparsity": mean("mask_sparsity")}
 
-    out = {"cells": []}
+    out = {"cells": [], "mesh": list(mesh) if mesh else None}
     row("# fig11 --real: measured engine throughput (this host, "
-        f"hidden={hidden}, {iterations} iters/point)")
+        f"hidden={hidden}, {iterations} iters/point"
+        + (f", mesh {mesh[0]}x{mesh[1]}" if mesh else "") + ")")
     row("sweep", "value", "steps_per_s", "env_steps_per_s",
         "est_sparse_gflops", "mask_sparsity")
     sweeps = ([("agents", a, dict(agents=a, batch=8, groups=4))
@@ -138,8 +142,21 @@ if __name__ == "__main__":
                          "accelerator model")
     ap.add_argument("--iterations", type=int, default=24)
     ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--mesh", default=None,
+                    help="ENV,AGENT shard counts: run the --real sweep on "
+                         "the jax.sharding mesh path (e.g. 2,2)")
     args = ap.parse_args()
+    mesh = None
+    if args.mesh:
+        if not args.real:
+            ap.error("--mesh only affects measured runs; pass --real")
+        from repro.launch.mesh import parse_marl_mesh
+        try:
+            mesh = parse_marl_mesh(args.mesh)
+        except ValueError as e:
+            ap.error(str(e))
     if args.real:
-        real_sweep(iterations=args.iterations, hidden=args.hidden)
+        real_sweep(iterations=args.iterations, hidden=args.hidden,
+                   mesh=mesh)
     else:
         main()

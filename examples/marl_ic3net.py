@@ -5,12 +5,15 @@ scenario from the ``repro.marl.envs`` registry (Traffic Junction and
 cooperative-navigation Spread ship alongside it). Training runs fully on
 device — whole log windows execute as one ``jax.lax.scan`` — with optional
 dense warmup before the FLGW mask switches on (``--warmup``) and optional
-data-parallel rollouts over local devices (``--parallel``). Prints the
-success-rate curve and the sparsity actually realised by the learned
-grouping matrices.
+scale-out over a 2-D ``(env, agent)`` ``jax.sharding`` mesh (``--mesh``;
+the old ``--parallel`` pmap switch survives as a deprecated alias).
+Prints the mesh sharding spec, the success-rate curve and the sparsity
+actually realised by the learned grouping matrices.
 
   PYTHONPATH=src python examples/marl_ic3net.py --env traffic_junction \
       --agents 4 --groups 4 --iterations 200
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+      python examples/marl_ic3net.py --mesh 2,2 --agents 4 --batch 16
 """
 import argparse
 
@@ -47,8 +50,17 @@ def main(argv=None):
                     help="plan-refresh policy: fixed period, or "
                          "change-driven from the ig/og argmax hash "
                          "(repro.core.encoder)")
+    ap.add_argument("--mesh", default=None,
+                    help="ENV,AGENT shard counts of the jax.sharding mesh "
+                         "path (e.g. 2,2); 'auto' puts every local device "
+                         "on the env axis. --batch stays the GLOBAL env "
+                         "batch. Replaces --parallel.")
     ap.add_argument("--parallel", action="store_true",
-                    help="pmap the env batch over local devices")
+                    help="DEPRECATED: routes to --mesh auto (the old pmap "
+                         "path is retired)")
+    ap.add_argument("--log-every", type=int, default=0,
+                    help="log-window length (0 = iterations/10); the scan "
+                         "path runs one on-device window per log line")
     ap.add_argument("--host-loop", action="store_true",
                     help="drive one update per host iteration (seed loop) "
                          "instead of the on-device scan")
@@ -58,7 +70,21 @@ def main(argv=None):
                               flgw_path=args.path)
     env, ecfg = envs_mod.make(args.env, n_agents=args.agents,
                               size=args.size, max_steps=3 * args.size)
-    tcfg = train_mod.TrainConfig(batch=args.batch, parallel=args.parallel)
+    mesh_shape = None
+    if args.mesh:
+        from repro.launch.mesh import parse_marl_mesh
+        try:
+            mesh_shape = ((0, 1) if args.mesh == "auto"
+                          else parse_marl_mesh(args.mesh))
+        except ValueError as e:
+            ap.error(str(e))
+    tcfg = train_mod.TrainConfig(batch=args.batch, parallel=args.parallel,
+                                 mesh=mesh_shape)
+    if mesh_shape is not None:
+        from repro.launch.mesh import describe_marl_mesh, make_marl_mesh
+        print(describe_marl_mesh(
+            make_marl_mesh(env=mesh_shape[0], agent=mesh_shape[1]),
+            batch=args.batch, n_agents=args.agents))
     schedule = SparsitySchedule(groups=args.groups,
                                 warmup_steps=args.warmup,
                                 refresh_every=args.refresh,
@@ -72,7 +98,7 @@ def main(argv=None):
 
     params, hist = train_mod.train(
         cfg, ecfg, tcfg, args.iterations, seed=args.seed,
-        log_every=max(1, args.iterations // 10), env=env,
+        log_every=args.log_every or max(1, args.iterations // 10), env=env,
         schedule=schedule, host_loop=args.host_loop)
     succ = np.array([h["success"] for h in hist])
     k = max(1, len(succ) // 10)

@@ -143,7 +143,7 @@ def maybe_refresh(params: dict, state: PlanState, it, cfg,
     """Re-encode ``state`` from the current grouping matrices when due.
 
     ``it`` may be a traced int32 (``lax.cond`` inside) — the same function
-    serves the on-device ``lax.scan`` carry, the pmap path and the host
+    serves the on-device ``lax.scan`` carry, the mesh path and the host
     loop mirror. ``schedule`` is a ``SparsitySchedule`` (or None: refresh
     every step); its ``refresh`` field picks the policy. Empty states pass
     through untouched. ``state`` must be a :class:`PlanState` — a raw
@@ -170,6 +170,44 @@ def maybe_refresh(params: dict, state: PlanState, it, cfg,
         changed = plan_signature(params) != state.sig
         pred = changed if mode == "on_change" else changed | due
     return jax.lax.cond(pred, lambda: encode_plans(params, cfg),
+                        lambda: state)
+
+
+def refresh_if_stale(params: dict, state: PlanState, cfg=None, *,
+                     encode=None) -> PlanState:
+    """Signature-gated re-encode with no step counter — the serving hook.
+
+    :func:`maybe_refresh` assumes a training loop with an iteration
+    counter; serving has none. Params are frozen *within* a request but
+    may move *between* requests (online tuning), so the request boundary
+    — prefill, or a cache reused across requests — must certify the
+    cached plans against the *current* params instead of trusting them
+    unconditionally. One :func:`plan_signature` pass (~half an encode)
+    does that; a bitwise-different layout triggers exactly one re-encode,
+    an unchanged layout passes the cached state through untouched.
+
+    ``encode`` overrides the default ``encode_plans(params, cfg)`` for
+    stacks with their own encode entry point (the transformer passes its
+    ``ModelConfig``-aware encoder). Empty states pass through untouched.
+    Traceable: ``lax.cond`` inside, so serve/prefill steps can jit it.
+    """
+    if not isinstance(state, PlanState):
+        raise TypeError(
+            f"refresh_if_stale needs a PlanState, got {type(state).__name__};"
+            " build one with encoder.encode_plans")
+    if not state.plans:
+        return state
+    if encode is None:
+        if cfg is None:
+            raise ValueError("refresh_if_stale needs cfg (or encode=)")
+        encode = lambda: encode_plans(params, cfg)   # noqa: E731
+    sig = plan_signature(params)
+    # Reuse the signature just computed instead of the one ``encode``
+    # re-derives internally (identical by construction — same params):
+    # under jit the duplicate inside the branch is then dead code, so a
+    # refresh costs one signature + one encode, not two signatures.
+    return jax.lax.cond(sig != state.sig,
+                        lambda: encode()._replace(sig=sig),
                         lambda: state)
 
 

@@ -15,6 +15,7 @@ oversized inputs fall back to the lexsort reference in ``ref.py``.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +27,53 @@ from repro.kernels.plan_encode.plan_encode import assign_slots
 # Above this item count the (Mp, bj) comparator tiles outgrow VMEM; the
 # encode is off the hot path, so just use the XLA reference there.
 _MAX_ITEMS = 4096
+
+# The implicit size fallback warns once per process (flag reset by tests).
+_size_fallback_warned = False
+
+
+def resolve_impl(items: int, impl: str | None = None) -> str:
+    """Which implementation an ``items``-row encode will run — the single
+    impl-selection policy, exposed so tests can assert on it.
+
+    An **explicit** ``impl`` is binding: requesting ``"pallas"`` above the
+    ``_MAX_ITEMS`` tile cap raises instead of silently degrading (the old
+    behavior ignored the request — a caller pinning the kernel for a perf
+    run would measure the lexsort reference without knowing). **Implicit**
+    resolution (``impl=None``) prefers the kernel and falls back to the
+    bitwise-identical lexsort reference under the shared
+    ``repro.kernels.use_reference_impl`` switch (intentional, silent) or
+    above the size cap (one ``RuntimeWarning`` per process).
+    """
+    global _size_fallback_warned
+    if impl is not None:
+        if impl not in ("pallas", "reference"):
+            raise ValueError(
+                f"impl must be 'pallas' or 'reference', got {impl!r}")
+        if impl == "pallas" and items > _MAX_ITEMS:
+            raise ValueError(
+                f"plan_encode: impl='pallas' was requested explicitly, but "
+                f"{items} items exceed the kernel's tile cap "
+                f"_MAX_ITEMS={_MAX_ITEMS} — the (Mp, bj) comparator tile "
+                "would outgrow VMEM. Pass impl='reference' (bitwise-"
+                "identical lexsort) or drop impl= for the automatic "
+                "fallback; tiling the placement pass to lift the cap is a "
+                "ROADMAP item.")
+        return impl
+    if reference_impl_active():
+        return "reference"
+    if items > _MAX_ITEMS:
+        if not _size_fallback_warned:
+            _size_fallback_warned = True
+            warnings.warn(
+                f"plan_encode: {items} items exceed the Pallas tile cap "
+                f"({_MAX_ITEMS}); falling back to the lexsort reference "
+                "(bitwise-identical, slower). Pass impl='reference' to "
+                "acknowledge, or impl='pallas' to make this an error. "
+                "(warned once per process)",
+                RuntimeWarning, stacklevel=3)
+        return "reference"
+    return "pallas"
 
 
 def default_interpret() -> bool:
@@ -50,7 +98,7 @@ def _balanced_assign(scores: jax.Array, axis: int, slack: float,
     lead = scores.shape[:-2]
     m, g = scores.shape[-2:]
     cap = _ref.compute_cap(m, g, slack)
-    if impl == "reference" or m > _MAX_ITEMS:
+    if impl == "reference":
         f = functools.partial(_ref.ref_balanced_assign, slack=slack)
         for _ in lead:
             f = jax.vmap(f)
@@ -95,9 +143,13 @@ def balanced_assign(scores: jax.Array, axis: int, slack: float = 1.0, *,
     Returns (..., G, cap) int32 item ids with ``cap = ceil(M/G · slack)``
     (padding slots hold M). Bitwise-identical to
     :func:`ref.ref_balanced_assign` for finite scores.
+
+    Implementation selection (Pallas kernel vs lexsort reference) follows
+    :func:`resolve_impl`: explicit ``impl`` binds (oversized ``"pallas"``
+    raises), implicit oversize falls back with a one-time warning.
     """
-    if impl is None:
-        impl = "reference" if reference_impl_active() else "pallas"
+    items = scores.shape[-2] if axis else scores.shape[-1]
+    impl = resolve_impl(items, impl)
     return _balanced_assign(scores, axis, slack, interpret, impl)
 
 

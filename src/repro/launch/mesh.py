@@ -22,6 +22,81 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return jax.make_mesh(shape, axes)
 
 
+def parse_marl_mesh(spec: str) -> tuple:
+    """``"ENV,AGENT"`` CLI spec -> (env, agent) shard counts.
+
+    Raises ``ValueError`` with a usage-style message on anything that is
+    not exactly two comma-separated ints — shared by every CLI that
+    exposes a ``--mesh`` flag, so malformed specs become argparse errors
+    instead of index/unpack tracebacks.
+    """
+    parts = spec.split(",")
+    try:
+        shape = tuple(int(x) for x in parts)
+    except ValueError:
+        shape = ()
+    if len(shape) != 2:
+        raise ValueError(
+            f"--mesh expects ENV,AGENT (two comma-separated ints, e.g. "
+            f"2,2), got {spec!r}")
+    return shape
+
+
+def make_marl_mesh(*, env: int = 0, agent: int = 1, devices=None) -> Mesh:
+    """2-D ``("env", "agent")`` mesh for the MARL training engine.
+
+    ``env`` shards the rollout batch (data parallelism over parallel
+    environments — the axis that dominates MARL wall-clock); ``agent``
+    shards the per-agent activation axis inside each environment (the
+    paper's multi-core split of per-agent work). IC3Net weights are
+    agent-shared, so the learner state replicates; only rollout work
+    partitions. ``env <= 0`` takes every device left after the agent
+    axis. A ``(1, 1)`` mesh works on any host — the single-device parity
+    configuration the tests pin against the host loop.
+    """
+    devices = jax.devices() if devices is None else list(devices)
+    n = len(devices)
+    agent = max(agent, 1)
+    if env <= 0:
+        if n % agent:
+            raise ValueError(
+                f"agent axis width {agent} does not divide {n} devices")
+        env = n // agent
+    if env * agent > n:
+        raise ValueError(f"marl mesh ({env}, {agent}) needs "
+                         f"{env * agent} devices, only {n} available")
+    import numpy as np
+    arr = np.array(devices[:env * agent]).reshape(env, agent)
+    return Mesh(arr, ("env", "agent"))
+
+
+def describe_marl_mesh(mesh: Mesh, *, batch: int, n_agents: int) -> str:
+    """Dry-run-style spec of what shards where on a MARL mesh.
+
+    Mirrors ``launch/dryrun.py``'s cell printing for the MARL engine: one
+    line per mesh axis with the dimension it partitions and the resulting
+    per-shard workload (axes that do not divide their dimension drop to
+    replication — the same shape-aware rule ``sharding.partition``
+    applies when lowering).
+    """
+    e, a = mesh.shape["env"], mesh.shape["agent"]
+
+    def per(total: int, width: int, what: str) -> str:
+        if total % width == 0:
+            return f"{total // width} {what}/shard"
+        return f"replicated ({total} % {width} != 0)"
+
+    return "\n".join([
+        f"marl mesh ({e}x{a}): axes (env, agent) over {e * a} device(s)",
+        f"  env   [{e}]: rollout batch {batch:>4} -> "
+        f"{per(batch, e, 'envs')}",
+        f"  agent [{a}]: agent axis    {n_agents:>4} -> "
+        f"{per(n_agents, a, 'agents')}",
+        "  learner state (params/opt/plans): replicated "
+        "(IC3Net weights are agent-shared)",
+    ])
+
+
 def make_mesh_from_devices(devices=None, *, model: int = 0) -> Mesh:
     """Elastic mesh: build (data, model) from whatever devices are alive.
 

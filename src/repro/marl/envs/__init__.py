@@ -16,7 +16,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable
 
-from repro.marl.envs import predator_prey, spread, traffic_junction
+from repro.marl.envs import (predator_prey, spread, traffic_junction,
+                             traffic_junction_4way)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +79,11 @@ def _register_module(name: str, mod) -> Env:
 PREDATOR_PREY = _register_module("predator_prey", predator_prey)
 TRAFFIC_JUNCTION = _register_module("traffic_junction", traffic_junction)
 SPREAD = _register_module("spread", spread)
+
+# 4-way TJ: two two-way roads with right/straight/left turning routes —
+# 12 curved routes through a shared 2x2 intersection (its own module).
+TRAFFIC_JUNCTION_4WAY = _register_module("traffic_junction_4way",
+                                         traffic_junction_4way)
 
 # Hard TJ: same step/observe dynamics, but a bigger grid, more cars and a
 # dense Bernoulli(p_arrive) arrival stream (its own config + reset).

@@ -80,15 +80,16 @@ def reset(key: jax.Array, cfg: EnvConfig) -> EnvState:
                     t=jnp.zeros((), jnp.int32))
 
 
-def observe(state: EnvState, cfg: EnvConfig) -> jax.Array:
-    """(A, obs_dim) float32 observations."""
-    a = cfg.n_agents
-    v = cfg.vision
+def occupancy_window(pos: jax.Array, act: jax.Array,
+                     vision: int) -> jax.Array:
+    """(A, (2v+1)²) occupancy of the *other* active cars around each car.
+
+    Shared by every junction variant — the vision window does not care
+    about route topology, only about grid positions and activity masks.
+    """
+    a = pos.shape[0]
+    v = vision
     w = 2 * v + 1
-    act = active(state, cfg)
-    pos = positions(state, cfg)
-    route_oh = jax.nn.one_hot(state.route, 2)
-    prog_oh = jax.nn.one_hot(jnp.clip(state.prog, 0, cfg.size), cfg.size + 1)
     off = pos[None, :, :] - pos[:, None, :]                  # (A, A, 2)
     inwin = jnp.all(jnp.abs(off) <= v, axis=-1)
     inwin = inwin & act[None, :] & act[:, None]
@@ -96,7 +97,16 @@ def observe(state: EnvState, cfg: EnvConfig) -> jax.Array:
     widx = (off[..., 0] + v) * w + (off[..., 1] + v)
     occ = jnp.sum(jax.nn.one_hot(jnp.clip(widx, 0, w * w - 1), w * w)
                   * inwin[..., None], axis=1)
-    occ = jnp.clip(occ, 0.0, 1.0)                            # (A, w²)
+    return jnp.clip(occ, 0.0, 1.0)                           # (A, w²)
+
+
+def observe(state: EnvState, cfg: EnvConfig) -> jax.Array:
+    """(A, obs_dim) float32 observations."""
+    act = active(state, cfg)
+    pos = positions(state, cfg)
+    route_oh = jax.nn.one_hot(state.route, 2)
+    prog_oh = jax.nn.one_hot(jnp.clip(state.prog, 0, cfg.size), cfg.size + 1)
+    occ = occupancy_window(pos, act, cfg.vision)
     return jnp.concatenate(
         [route_oh, prog_oh, act[:, None].astype(jnp.float32), occ], axis=1)
 
@@ -154,32 +164,45 @@ class HardConfig(NamedTuple):
     p_arrive: float = 0.7             # per-step arrival probability
 
 
-def reset_hard(key: jax.Array, cfg: HardConfig) -> EnvState:
-    """Entry gaps drawn Geometric(p_arrive): the i-th car enters one gap
+def arrival_stream(key: jax.Array, n: int, p_arrive: float,
+                   cap: int) -> jax.Array:
+    """(n,) strictly-increasing entry steps with Geometric(p) gaps.
+
+    Entry gaps drawn Geometric(p_arrive): the i-th car enters one gap
     after the (i-1)-th, so a higher ``p_arrive`` packs more cars onto the
     road simultaneously. Entries stay *strictly increasing* even when the
-    tail is squeezed so every car can still clear before ``max_steps`` —
+    tail is squeezed under the feasibility budget ``cap`` (the latest
+    step from which the last car can still clear before ``max_steps``) —
     two cars must never share an entry step, or same-route pairs would
     spawn collided and no policy could succeed (collisions have to come
-    from policy, as in the easy env).
+    from policy, as in the easy env). Shared by the hard and 4-way
+    variants.
     """
-    kr, ke = jax.random.split(key)
-    a = cfg.n_agents
-    route = jax.random.bernoulli(kr, 0.5, (a,)).astype(jnp.int32)
-    p = min(max(cfg.p_arrive, 1e-3), 1.0)
+    p = min(max(p_arrive, 1e-3), 1.0)
     if p >= 1.0:
-        gaps = jnp.ones((a,), jnp.int32)
+        gaps = jnp.ones((n,), jnp.int32)
     else:
-        u = jax.random.uniform(ke, (a,), minval=1e-6, maxval=1.0)
+        u = jax.random.uniform(key, (n,), minval=1e-6, maxval=1.0)
         gaps = 1 + jnp.floor(jnp.log(u) / jnp.log1p(-p)).astype(jnp.int32)
     enter_t = jnp.cumsum(gaps) - gaps[0]                 # first car at t=0
     # squeeze the tail under the feasibility budget while keeping entries
-    # strictly increasing: car i may enter no later than cap - (a-1-i),
+    # strictly increasing: car i may enter no later than cap - (n-1-i),
     # and (fallback when even that is infeasible) no earlier than i
-    cap = max(0, cfg.max_steps - cfg.size - 1)
-    idx = jnp.arange(a)
-    enter_t = jnp.maximum(idx, jnp.minimum(enter_t, cap - (a - 1 - idx)))
-    return EnvState(route=route, enter_t=enter_t.astype(jnp.int32),
+    cap = max(0, cap)
+    idx = jnp.arange(n)
+    enter_t = jnp.maximum(idx, jnp.minimum(enter_t, cap - (n - 1 - idx)))
+    return enter_t.astype(jnp.int32)
+
+
+def reset_hard(key: jax.Array, cfg: HardConfig) -> EnvState:
+    """Hard-variant reset: Geometric(p_arrive) arrival stream (see
+    :func:`arrival_stream`) over the two straight routes."""
+    kr, ke = jax.random.split(key)
+    a = cfg.n_agents
+    route = jax.random.bernoulli(kr, 0.5, (a,)).astype(jnp.int32)
+    enter_t = arrival_stream(ke, a, cfg.p_arrive,
+                             cfg.max_steps - cfg.size - 1)
+    return EnvState(route=route, enter_t=enter_t,
                     prog=jnp.zeros((a,), jnp.int32),
                     collided=jnp.zeros((), bool),
                     cleared=jnp.zeros((), bool),

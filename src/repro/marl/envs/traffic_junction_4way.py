@@ -1,0 +1,176 @@
+"""Traffic Junction, 4-way variant — two two-way roads, curved routes.
+
+IC3Net's hardest junction regime: two 2-lane roads cross in the middle of
+a ``size × size`` grid (``size`` even), giving four entry arms; each car
+picks one of three turns at the junction — right, straight or left — for
+12 distinct routes, several of which genuinely curve through the shared
+2×2 intersection. Right-hand traffic fixes the lanes (``m = size // 2``):
+eastbound row ``m``, westbound row ``m - 1``, southbound column ``m - 1``,
+northbound column ``m``.
+
+Route geometry is *static*: arm 0 (from the west) is written out by hand
+and arms 1–3 follow by 90° grid rotations, yielding a cached
+``(12, Lmax, 2)`` cell table plus per-route lengths. Cars are just
+``(route, progress)`` indices into that table, so ``reset``/``step``/
+``observe`` stay pure, fixed-shape and vmap/scan-friendly like every
+registered env — the training engine's on-device ``lax.scan`` batches
+thousands of these next to the learner.
+
+Arrivals follow the hard variant's Geometric(``p_arrive``) stream with
+strictly increasing entry steps (collisions must come from policy, not
+the spawner); dynamics, rewards and the success criterion (no collision
+AND every car cleared) mirror :mod:`~repro.marl.envs.traffic_junction`,
+whose ``EnvState`` is reused unchanged.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.marl.envs.traffic_junction import (EnvState, arrival_stream,
+                                              occupancy_window, success)
+
+__all__ = ["EnvConfig", "EnvState", "reset", "step", "observe", "success",
+           "obs_dim", "n_actions", "positions", "active"]
+
+N_ACTIONS = 2   # 0 = brake, 1 = gas
+N_ROUTES = 12   # 4 arms x {right, straight, left}
+
+
+class EnvConfig(NamedTuple):
+    n_agents: int = 6
+    size: int = 8                     # even; roads are 2 lanes wide
+    vision: int = 1
+    max_steps: int = 40
+    time_penalty: float = -0.01
+    collision_penalty: float = -1.0
+    p_arrive: float = 0.5             # per-step arrival probability
+
+
+@lru_cache(maxsize=None)
+def _route_table(size: int) -> tuple[np.ndarray, np.ndarray]:
+    """Static route geometry: (12, Lmax, 2) int32 cells + (12,) lengths.
+
+    Routes are ordered ``arm * 3 + turn`` with arms counter-enumerated by
+    successive clockwise rotations starting from the west (0 = west,
+    1 = north, 2 = east, 3 = south) and turns (0 = right, 1 = straight,
+    2 = left). Paths shorter than ``Lmax`` are padded with their exit
+    cell, so clipping ``prog`` into the table always lands on-route.
+    """
+    if size % 2 or size < 4:
+        raise ValueError(f"4-way junction needs an even size >= 4, "
+                         f"got {size}")
+    m = size // 2
+    east = [(m, c) for c in range(size)]                   # straight
+    # right turn: leave the eastbound lane at (m, m-1), merge onto the
+    # southbound lane (col m-1) just past the intersection
+    right = east[:m] + [(r, m - 1) for r in range(m + 1, size)]
+    # left turn: cross to (m, m), then up the northbound lane (col m)
+    left = east[:m + 1] + [(r, m) for r in range(m - 1, -1, -1)]
+
+    def rot(path):   # 90° clockwise: west arm -> north arm -> east -> south
+        return [(c, size - 1 - r) for r, c in path]
+
+    routes, arm = [], [right, east, left]
+    for _ in range(4):
+        routes.extend(arm)
+        arm = [rot(p) for p in arm]
+    lmax = max(len(p) for p in routes)
+    table = np.stack([np.asarray(p + [p[-1]] * (lmax - len(p)), np.int32)
+                      for p in routes])
+    lens = np.asarray([len(p) for p in routes], np.int32)
+    return table, lens
+
+
+def _lmax(cfg: EnvConfig) -> int:
+    return cfg.size + 1          # the left turn: m+1 cells in, m cells out
+
+
+def obs_dim(cfg: EnvConfig) -> int:
+    # route one-hot (12) + progress one-hot (Lmax+1) + on-road flag
+    # + occupancy window of the other cars ((2v+1)^2)
+    return N_ROUTES + _lmax(cfg) + 1 + 1 + (2 * cfg.vision + 1) ** 2
+
+
+def n_actions(cfg: EnvConfig) -> int:
+    return N_ACTIONS
+
+
+def _route_len(route: jax.Array, cfg: EnvConfig) -> jax.Array:
+    _, lens = _route_table(cfg.size)
+    return jnp.asarray(lens)[route]
+
+
+def positions(state: EnvState, cfg: EnvConfig) -> jax.Array:
+    """(A, 2) int32 grid cells; exited cars clip to their exit cell."""
+    table, _ = _route_table(cfg.size)
+    tbl = jnp.asarray(table)
+    return tbl[state.route, jnp.clip(state.prog, 0, tbl.shape[1] - 1)]
+
+
+def active(state: EnvState, cfg: EnvConfig) -> jax.Array:
+    """(A,) bool — entered and not yet past the end of its route."""
+    return (state.t >= state.enter_t) & \
+        (state.prog < _route_len(state.route, cfg))
+
+
+def reset(key: jax.Array, cfg: EnvConfig) -> EnvState:
+    kr, ke = jax.random.split(key)
+    a = cfg.n_agents
+    route = jax.random.randint(kr, (a,), 0, N_ROUTES, jnp.int32)
+    enter_t = arrival_stream(ke, a, cfg.p_arrive,
+                             cfg.max_steps - _lmax(cfg) - 1)
+    return EnvState(route=route, enter_t=enter_t,
+                    prog=jnp.zeros((a,), jnp.int32),
+                    collided=jnp.zeros((), bool),
+                    cleared=jnp.zeros((), bool),
+                    t=jnp.zeros((), jnp.int32))
+
+
+def observe(state: EnvState, cfg: EnvConfig) -> jax.Array:
+    """(A, obs_dim) float32 observations."""
+    act = active(state, cfg)
+    pos = positions(state, cfg)
+    lmax = _lmax(cfg)
+    route_oh = jax.nn.one_hot(state.route, N_ROUTES)
+    prog_oh = jax.nn.one_hot(jnp.clip(state.prog, 0, lmax), lmax + 1)
+    occ = occupancy_window(pos, act, cfg.vision)
+    return jnp.concatenate(
+        [route_oh, prog_oh, act[:, None].astype(jnp.float32), occ], axis=1)
+
+
+def step(state: EnvState, actions: jax.Array,
+         cfg: EnvConfig) -> tuple[EnvState, jax.Array, jax.Array]:
+    """actions: (A,) int32 ∈ {0, 1}. Returns (new_state, rewards (A,), done)."""
+    plen = _route_len(state.route, cfg)
+    act = active(state, cfg)
+    gas = (actions > 0) & act
+    prog = jnp.minimum(state.prog + gas.astype(jnp.int32), plen)
+    nstate = state._replace(prog=prog)
+    # activity at the *post-step* time: a car entering at t+1 spawns onto
+    # its entry cell now, so sitting on that cell is a collision already
+    now = (state.t + 1 >= state.enter_t) & (prog < plen)
+    pos = positions(nstate, cfg)
+    # cell id per car; off-road cars get a unique sentinel so they never match
+    cell = pos[:, 0] * cfg.size + pos[:, 1]
+    cell = jnp.where(now, cell,
+                     cfg.size * cfg.size + jnp.arange(cfg.n_agents))
+    share = jnp.sum(cell[:, None] == cell[None, :], axis=1) - 1
+    coll = share > 0                                         # (A,) bool
+    tau = (state.t + 1 - state.enter_t).astype(jnp.float32)
+    rewards = jnp.where(
+        now,
+        cfg.time_penalty * tau
+        + cfg.collision_penalty * coll.astype(jnp.float32),
+        0.0)
+    t = state.t + 1
+    cleared = jnp.all(prog >= plen)
+    done = cleared | (t >= cfg.max_steps)
+    return EnvState(route=state.route, enter_t=state.enter_t, prog=prog,
+                    collided=state.collided | jnp.any(coll),
+                    cleared=cleared, t=t), \
+        rewards, done

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.core import encoder
 from repro.core.flgw import FLGWConfig
 from repro.models.layers import dense_init, plan_of, proj
+from repro.sharding.partition import constrain
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +123,11 @@ def policy_step(params, cfg: IC3NetConfig, obs, hc, gate_prev, plans=None):
     a = cfg.n_agents
     fl = cfg.flgw
     h, c = hc
+    # Mesh path: per-agent work shards over the "agent" axis (no-op hints
+    # off the mesh — see repro.sharding.partition.constrain). The gated
+    # mean below is the one cross-agent reduction: on an agent-sharded
+    # mesh it is the communication all-reduce, everything else is local.
+    obs = constrain(obs, ("agent", None))
     comm_src = jax.lax.stop_gradient(h) if cfg.comm_detach else h
     cvec = proj(params["comm"], comm_src, fl,
                 plan=plan_of(plans, "comm"))             # (A, H)
@@ -131,8 +137,9 @@ def policy_step(params, cfg: IC3NetConfig, obs, hc, gate_prev, plans=None):
     denom = max(a - 1, 1)
     comm_in = (total - cvec) / denom                      # (A, H)
     e = jnp.tanh(proj(params["enc"], obs, fl, plan=plan_of(plans, "enc")))
-    x = e + comm_in
+    x = constrain(e + comm_in, ("agent", None))
     h, c = lstm_cell(params, cfg, x, (h, c), plans)
+    h = constrain(h, ("agent", None))
     logits = proj(params["policy"], h, fl, plan=plan_of(plans, "policy"))
     value = proj(params["value"], h)[:, 0]
     gate_logits = proj(params["gate"], h)

@@ -11,9 +11,13 @@ its speedup and scope:
 * **fully on device**: iterations run inside a ``jax.lax.scan`` — the host
   never syncs per step. Metrics are accumulated on device and fetched once
   per log window, mirroring the paper's "fully on-chip training" (the FPGA
-  never round-trips to a host between iterations). An optional ``pmap``
-  path splits the environment batch across local devices with gradient
-  ``pmean``, for data-parallel rollouts.
+  never round-trips to a host between iterations). Scale-out runs the same
+  scan under ``jit`` on a 2-D ``("env", "agent")`` ``jax.sharding`` mesh
+  (``TrainConfig.mesh``; ``repro.launch.mesh.make_marl_mesh``): the rollout
+  batch shards over ``env``, per-agent activations over ``agent``, and the
+  learner state stays replicated (IC3Net weights are agent-shared). The
+  retired ``pmap`` path survives as the deprecated ``TrainConfig.parallel``
+  alias, which routes to a 1-D env-only mesh.
 
 A FLGW sparsity schedule (``repro.core.schedule.SparsitySchedule``) threads
 through the loop: during ``warmup_steps`` the network trains dense, then the
@@ -22,20 +26,28 @@ static: IG/OG shapes depend on it.)
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import functools
 import time
+import warnings
 from functools import partial
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import kernels as kernels_mod
 from repro.core import encoder, flgw, grouped
 from repro.core.schedule import SparsitySchedule
+from repro.launch.mesh import make_marl_mesh
 from repro.marl import envs as envs_mod
 from repro.marl import ic3net
 from repro.optim.optimizers import rmsprop, rmsprop_init
+from repro.sharding import partition
+from repro.sharding.partition import constrain
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,7 +58,16 @@ class TrainConfig:
     value_coef: float = 0.5
     entropy_coef: float = 0.01
     gate_coef: float = 0.01       # IC3Net gate regularizer
-    parallel: bool = False        # pmap the env batch over local devices
+    # (env, agent) shard counts of the jax.sharding mesh path; env <= 0
+    # auto-fills with whatever devices the agent axis leaves free. None
+    # keeps the single-device scan. ``batch`` is the GLOBAL env batch,
+    # sharded over the env axis (the retired pmap path rolled out
+    # ``batch`` envs per device — multiply by the old device count when
+    # migrating).
+    mesh: Optional[tuple] = None
+    # DEPRECATED: the old pmap data-parallel switch. Routes to a 1-D
+    # env-only mesh (mesh=(local_device_count, 1)); set ``mesh`` instead.
+    parallel: bool = False
 
 
 def rollout(params, key, cfg: ic3net.IC3NetConfig, ecfg, env: envs_mod.Env,
@@ -87,8 +108,14 @@ def rollout(params, key, cfg: ic3net.IC3NetConfig, ecfg, env: envs_mod.Env,
 def a2c_loss(params, key, cfg, ecfg, tcfg: TrainConfig, env: envs_mod.Env,
              plans=None):
     keys = jax.random.split(key, tcfg.batch)
+    # Mesh path: the rollout batch is the env-axis workload. The logical
+    # constraints are inert (no-ops) unless tracing happens under
+    # partition.use_constraints(mesh) — single-device runs never pay them.
+    keys = constrain(keys, ("env",) + (None,) * (keys.ndim - 1))
     rew, logp, val, ent, gate_logp, gates, succ = jax.vmap(
         lambda k: rollout(params, k, cfg, ecfg, env, plans))(keys)
+    rew, logp, val, ent = (constrain(t, ("env", None, "agent"))
+                           for t in (rew, logp, val, ent))
     # returns-to-go, (B, T, A)
     def disc(carry, r):
         carry = r + tcfg.gamma * carry
@@ -182,7 +209,7 @@ def train_step(params, opt_state, key, cfg, ecfg, tcfg: TrainConfig,
 
 
 def _scan_chunk(params, opt_state, key, plans, start, n, cfg, ecfg, tcfg,
-                env, schedule, axis=None):
+                env, schedule):
     """``n`` update iterations as one on-device ``lax.scan``.
 
     The FLGW plan cache rides in the carry: each iteration first passes
@@ -191,10 +218,12 @@ def _scan_chunk(params, opt_state, key, plans, start, n, cfg, ecfg, tcfg,
     carried (stale) plans otherwise, so the grouped Pallas kernel runs
     against amortized metadata inside the compiled loop.
 
-    ``axis`` names the pmap axis for gradient/metric ``pmean`` (None on the
-    single-device path — the only difference between the two). Returns
-    stacked per-iteration metrics; the host fetches them once per log
-    window instead of syncing every step.
+    The same function serves the single-device path (``_train_chunk``) and
+    the mesh path (``make_mesh_chunk``): under a mesh, GSPMD partitions the
+    rollout from the logical constraints in ``a2c_loss`` /
+    ``ic3net.policy_step`` — no pmean, no per-device key folding, just one
+    global program. Returns stacked per-iteration metrics; the host
+    fetches them once per log window instead of syncing every step.
     """
     def body(carry, it):
         params, opt_state, key, plans = carry
@@ -202,9 +231,6 @@ def _scan_chunk(params, opt_state, key, plans, start, n, cfg, ecfg, tcfg,
         key, k = jax.random.split(key)
         metrics, grads = _loss_grads(params, k, it, cfg, ecfg, tcfg, env,
                                      schedule, plans)
-        if axis is not None:
-            grads = jax.lax.pmean(grads, axis)
-            metrics = jax.lax.pmean(metrics, axis)
         params, opt_state = rmsprop(params, grads, opt_state, lr=tcfg.lr)
         return (params, opt_state, key, plans), metrics
 
@@ -214,15 +240,74 @@ def _scan_chunk(params, opt_state, key, plans, start, n, cfg, ecfg, tcfg,
     return params, opt_state, key, plans, metrics
 
 
-_train_chunk = partial(jax.jit,
-                       static_argnames=("n", "cfg", "ecfg", "tcfg", "env",
-                                        "schedule", "axis"))(_scan_chunk)
+_CHUNK_STATICS = ("n", "cfg", "ecfg", "tcfg", "env", "schedule")
 
-# data-parallel chunk: each device rolls out tcfg.batch envs, the RMSprop
-# update stays replicated because the pmean'd grads are identical
-_train_chunk_pmap = partial(jax.pmap, axis_name="dev",
-                            static_broadcasted_argnums=(5, 6, 7, 8, 9, 10))(
-    partial(_scan_chunk, axis="dev"))
+_train_chunk = partial(jax.jit, static_argnames=_CHUNK_STATICS)(_scan_chunk)
+
+
+@functools.lru_cache(maxsize=None)   # one jit (+its trace cache) per mesh
+def make_mesh_chunk(mesh: Mesh):
+    """jit of ``_scan_chunk`` for the 2-D ``("env", "agent")`` mesh path.
+
+    The learner state (params / optimizer state / plan cache / PRNG key)
+    is pinned replicated via ``in_shardings``/``out_shardings`` — IC3Net
+    shares weights across agents, so there is nothing per-agent to shard
+    in the state. The rollout work partitions instead: the env batch over
+    ``env`` and per-agent activations over ``agent``, from the logical
+    ``with_sharding_constraint`` hints that become active when the call is
+    traced under ``partition.use_constraints(mesh)`` (see ``train``).
+
+    One global program replaces the retired pmap path: the batch is the
+    global batch (not per-device), keys are not folded per device, and on
+    a (1, 1) mesh the computation is identical to ``_train_chunk`` — the
+    parity tests pin that against the host loop.
+    """
+    repl = NamedSharding(mesh, P())
+    return partial(jax.jit, static_argnames=_CHUNK_STATICS,
+                   in_shardings=(repl, repl, repl, repl, repl),
+                   out_shardings=repl)(_scan_chunk)
+
+
+def _resolve_mesh(tcfg: TrainConfig) -> Optional[Mesh]:
+    """TrainConfig -> Mesh (or None for the plain single-device scan)."""
+    shape = tcfg.mesh
+    if tcfg.parallel:
+        routing = (
+            "parallel=True now routes to a 1-D env-only mesh "
+            "(mesh=(local_device_count, 1)) where ``batch`` is the GLOBAL "
+            "env batch" if shape is None else
+            f"the explicit TrainConfig.mesh={shape} wins and parallel=True "
+            "is ignored")
+        warnings.warn(
+            "TrainConfig.parallel is deprecated: the pmap data-parallel "
+            f"path was replaced by the jax.sharding mesh engine. {routing};"
+            " set TrainConfig.mesh=(env, agent) explicitly.",
+            DeprecationWarning, stacklevel=3)
+        if shape is None:
+            shape = (jax.local_device_count(), 1)
+    if shape is None:
+        return None
+    env_shards, agent_shards = shape
+    return make_marl_mesh(env=env_shards, agent=agent_shards)
+
+
+@contextlib.contextmanager
+def _mesh_contexts(mesh: Mesh):
+    """Contexts active while tracing/running a mesh chunk.
+
+    ``use_constraints`` switches the logical sharding hints on. On a
+    multi-device mesh the FLGW Pallas kernels lower via the shared
+    reference impl (``repro.kernels.use_reference_impl``): GSPMD cannot
+    partition a pallas custom call — it would replicate the kernel on
+    every shard — while the mathematically identical jnp reference shards
+    like any einsum (same rationale as ``launch/dryrun``). A (1, 1) mesh
+    keeps the kernels, preserving bitwise parity with the scan path.
+    """
+    ref = (kernels_mod.use_reference_impl if mesh.devices.size > 1
+           else contextlib.nullcontext)
+    with mesh, partition.use_constraints(mesh), ref():
+        yield
+
 
 _encode_plans = partial(jax.jit, static_argnames=("cfg",))(
     ic3net.encode_plans)
@@ -256,33 +341,35 @@ def train(cfg: ic3net.IC3NetConfig, ecfg=None, tcfg: TrainConfig = None,
     estimated ``sparse_gflops`` (dense-equivalent FLOPs scaled by the
     measured mask sparsity over measured wall time; the first window of
     the scan path includes compile time).
-    The default path scans whole log windows on device; ``host_loop=True``
-    drives one jitted update per iteration from Python (the seed loop,
-    kept for parity testing and debugging).
+    The default path scans whole log windows on device; with
+    ``tcfg.mesh=(env, agent)`` the same scan runs under ``jit`` on a
+    ``jax.sharding`` mesh — rollout batch sharded over ``env``, per-agent
+    activations over ``agent``, learner state replicated (``tcfg.batch``
+    stays the *global* batch). ``host_loop=True`` drives one jitted
+    update per iteration from Python (the seed loop, kept for parity
+    testing and debugging; it ignores the mesh).
     """
     if isinstance(env, str):
         env = envs_mod.get(env)
     if ecfg is None:
         ecfg = env.config_cls()
     tcfg = tcfg or TrainConfig()
+    mesh = None if host_loop else _resolve_mesh(tcfg)
     cfg, key, params, opt_state = _init(cfg, ecfg, env, seed)
     # plan cache: encoded once here, then refreshed inside the loop every
     # schedule.refresh_every iterations ({} when the grouped path is off)
     plans = _encode_plans(params, cfg)
     history: list[dict] = []
-    ndev = jax.local_device_count()
-    use_pmap = not host_loop and tcfg.parallel and ndev > 1
-    # fwd + ~2x bwd dense-equivalent FLOPs of one training iteration;
-    # the pmap path rolls out tcfg.batch envs on *each* device
-    world = ndev if use_pmap else 1
-    flops_iter = (3 * world * tcfg.batch * ecfg.max_steps
+    # fwd + ~2x bwd dense-equivalent FLOPs of one training iteration
+    # (tcfg.batch is the global env batch on every path)
+    flops_iter = (3 * tcfg.batch * ecfg.max_steps
                   * ic3net.flops_per_step(cfg))
 
     def throughput(ms: dict, n_iters: int, dt: float) -> dict:
         rate = n_iters / max(dt, 1e-9)
         return {
             "steps_per_s": rate,
-            "env_steps_per_s": rate * world * tcfg.batch * ecfg.max_steps,
+            "env_steps_per_s": rate * tcfg.batch * ecfg.max_steps,
             "sparse_gflops": rate * flops_iter
             * (1.0 - ms.get("mask_sparsity", 0.0)) / 1e9,
         }
@@ -305,25 +392,19 @@ def train(cfg: ic3net.IC3NetConfig, ecfg=None, tcfg: TrainConfig = None,
                       f"return {history[-1]['return']:.3f}")
         return params, history
 
-    if use_pmap:
-        # replicate learner state; each device gets an independent key
-        params = jax.device_put_replicated(params, jax.local_devices())
-        opt_state = jax.device_put_replicated(opt_state, jax.local_devices())
-        plans = jax.device_put_replicated(plans, jax.local_devices())
-        key = jax.vmap(jax.random.fold_in, (None, 0))(
-            key, jnp.arange(ndev, dtype=jnp.uint32))
+    mesh_chunk = None if mesh is None else make_mesh_chunk(mesh)
 
     window = log_every if log_every > 0 else min(max(iterations, 1), 100)
     start = 0
     while start < iterations:
         n = min(window, iterations - start)
         t0 = time.perf_counter()
-        if use_pmap:
-            starts = jnp.full((ndev,), start, jnp.int32)
-            params, opt_state, key, plans, metrics = _train_chunk_pmap(
-                params, opt_state, key, plans, starts, n, cfg, ecfg, tcfg,
-                env, schedule)
-            metrics = jax.tree.map(lambda m: m[0], metrics)  # replicated
+        if mesh_chunk is not None:
+            with _mesh_contexts(mesh):
+                params, opt_state, key, plans, metrics = mesh_chunk(
+                    params, opt_state, key, plans,
+                    jnp.asarray(start, jnp.int32), n,
+                    cfg, ecfg, tcfg, env, schedule)
         else:
             params, opt_state, key, plans, metrics = _train_chunk(
                 params, opt_state, key, plans,
@@ -340,6 +421,4 @@ def train(cfg: ic3net.IC3NetConfig, ecfg=None, tcfg: TrainConfig = None,
                   f"return {history[start]['return']:.3f}")
         start += n
 
-    if use_pmap:
-        params = jax.tree.map(lambda p: p[0], params)
     return params, history

@@ -312,8 +312,9 @@ def lm_apply(params, cfg: ModelConfig, tokens, positions, *,
     if cache is not None:
         new_cache = {"pos": pos + tokens.shape[1], "blocks": new_slot_caches}
         if "plans" in cache:
-            # plans ride the cache unchanged — params are frozen while
-            # serving, so there is nothing to refresh
+            # plans ride the cache unchanged — params are frozen *within*
+            # a request; across requests (online tuning) the serving loop
+            # certifies them via refresh_cache_plans at the boundary
             new_cache["plans"] = cache["plans"]
         if encoder_out is not None:
             new_cache["encoder_out"] = encoder_out
@@ -373,6 +374,28 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
         cache["encoder_out"] = jnp.zeros(
             (batch, cfg.num_frames, cfg.d_model), dtype)
     return cache
+
+
+def refresh_cache_plans(params, cfg: ModelConfig, cache: dict) -> dict:
+    """Request-boundary staleness check for the serving PlanState.
+
+    ``cache["plans"]`` is encoded once (``init_cache(..., params=...)``)
+    and trusted by every decode step — correct while params are frozen,
+    stale the moment online tuning moves them between requests. Call this
+    at the prefill/serve boundary of each request: it re-hashes the
+    current params' grouping layout (:func:`repro.core.encoder.
+    plan_signature`) against the cached signature and re-encodes only on
+    a mismatch, so the per-request cost is ~half an encode when nothing
+    moved and exactly one encode when it did. Caches without a PlanState
+    (off the grouped path) pass through untouched. Jit-friendly — compose
+    it into a request-setup step or call it eagerly between requests.
+    """
+    plans = cache.get("plans")
+    if not isinstance(plans, planenc.PlanState) or not plans.plans:
+        return cache
+    fresh = planenc.refresh_if_stale(
+        params, plans, encode=lambda: encode_plans(params, cfg))
+    return dict(cache, plans=fresh)
 
 
 def plan_specs(cfg: ModelConfig):

@@ -62,6 +62,13 @@ LOGICAL_RULES: dict[str, Any] = {
     "seq_kv": "model",         # decode KV caches: shard the KV sequence dim
     # --- ic3net (tiny, replicated) ------------------------------------------
     "in": None, "out": None, "hidden": None, "gates": None,
+    # --- marl mesh (repro.launch.mesh.make_marl_mesh) -----------------------
+    # Rollout batch over parallel environments and per-agent activations
+    # over the agent axis. These mesh axes only exist on the MARL mesh;
+    # on the production (data, model) mesh the names drop to replication,
+    # so the constraints in marl/train and marl/ic3net are inert there.
+    "env": "env",
+    "agent": "agent",
 }
 
 

@@ -131,7 +131,8 @@ def make_train_step(cfg: ModelConfig, *, optimizer: str = "adamw",
 
 
 def make_serve_step(cfg: ModelConfig, *, banded: bool = False,
-                    unroll_blocks: bool = False):
+                    unroll_blocks: bool = False,
+                    refresh_plans: bool = False):
     """Returns ``serve_step(params, cache, tokens, positions)`` —
     one-token greedy decode against the cache (the decode shape cells).
 
@@ -140,11 +141,20 @@ def make_serve_step(cfg: ModelConfig, *, banded: bool = False,
     ``cache["plans"]`` for every FLGW projection — mixers included — and
     threads it through to the returned cache, so the grouped Pallas
     kernel runs inside the decode loop against amortized metadata with
-    zero ``make_plan`` work per step (params are frozen while serving;
-    nothing to refresh).
+    zero ``make_plan`` work per step while params are frozen.
+
+    Params that move *between* requests (online tuning) make those cached
+    plans stale; the request boundary should pass the cache through
+    ``transformer.refresh_cache_plans`` (one signature check per request).
+    ``refresh_plans=True`` builds that check into every decode step
+    instead — for servers that interleave tuning and decoding with no
+    request boundary to hook (costs ~half an encode per step, so keep it
+    off on the pure-decode hot path).
     """
 
     def serve_step(params, cache, tokens, positions):
+        if refresh_plans:
+            cache = transformer.refresh_cache_plans(params, cfg, cache)
         logits, _, cache = transformer.lm_apply(
             params, cfg, tokens, positions, cache=cache, banded=banded,
             remat=False, unroll_blocks=unroll_blocks)
@@ -166,7 +176,10 @@ def make_prefill_step(cfg: ModelConfig, *, banded: bool = False,
     (or reuses a caller-supplied one — e.g. the plans already cached
     beside the KV cache) and every projection of the whole forward
     consumes it; without the cached state each grouped projection would
-    re-encode its own plan per call.
+    re-encode its own plan per call. A caller-supplied PlanState is
+    *certified*, not trusted: prefill is the request boundary, and params
+    may have moved since the plans were cached (online tuning), so a
+    signature check re-encodes iff the grouping layout changed.
     """
     def prefill_step(params, batch, plans=None):
         s = batch["tokens"].shape[1]
@@ -174,6 +187,10 @@ def make_prefill_step(cfg: ModelConfig, *, banded: bool = False,
         if plans is None:
             # empty PlanState (a no-op) off the grouped path
             plans = transformer.encode_plans(params, cfg)
+        elif isinstance(plans, planenc.PlanState) and plans.plans:
+            plans = planenc.refresh_if_stale(
+                params, plans,
+                encode=lambda: transformer.encode_plans(params, cfg))
         hidden, _, _ = transformer.lm_apply(
             params, cfg, batch["tokens"], batch["positions"],
             patch_embeds=batch.get("patch_embeds"),

@@ -339,8 +339,13 @@ def test_serve_step_with_cached_planstate_never_traces_make_plan(
 
 def test_prefill_step_encodes_once_per_layer(monkeypatch):
     """Prefill encodes the PlanState once (batched over blocks, one
-    make_plan per FLGW layer) and every projection consumes it; a
-    caller-supplied PlanState suppresses even that."""
+    make_plan per FLGW layer) and every projection consumes it. A
+    caller-supplied PlanState is *certified* at the request boundary
+    (serving-staleness fix): the signature-gated refresh traces one
+    conditional encode — still once per layer, never per projection —
+    and at runtime re-encodes only when the layout actually moved
+    (the fresh-plans no-op is pinned bitwise in
+    tests/test_serving_refresh.py)."""
     cfg = _tiny_lm_cfg(flgw_targets=("mlp", "attn"), remat=False)
     params, _ = transformer.lm_init(jax.random.PRNGKey(0), cfg)
     plans = transformer.encode_plans(params, cfg)
@@ -351,7 +356,9 @@ def test_prefill_step_encodes_once_per_layer(monkeypatch):
     assert calls["n"] == 7        # one per FLGW layer, not per projection
     calls["n"] = 0
     jax.eval_shape(prefill, params, batch, plans)
-    assert calls["n"] == 0
+    # the certification branch traces the same once-per-layer encode
+    # (inside lax.cond — zero encodes execute while the plans are fresh)
+    assert calls["n"] == 7
 
 
 def test_lm_train_step_runs_and_carries_plans():

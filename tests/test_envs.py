@@ -13,7 +13,8 @@ import pytest
 
 from repro.marl import env as legacy_env
 from repro.marl import envs
-from repro.marl.envs import predator_prey, spread, traffic_junction
+from repro.marl.envs import (predator_prey, spread, traffic_junction,
+                             traffic_junction_4way)
 
 
 # ---------------------------------------------------------------------------
@@ -22,6 +23,7 @@ from repro.marl.envs import predator_prey, spread, traffic_junction
 
 def test_registry_lists_all_bundled_envs():
     assert envs.names() == ["predator_prey", "spread", "traffic_junction",
+                            "traffic_junction_4way",
                             "traffic_junction_hard"]
 
 
@@ -220,6 +222,118 @@ def test_tj_inactive_cars_get_zero_reward():
     late = int(np.asarray(state.enter_t).argmax())
     _, rew, _ = traffic_junction.step(state, jnp.ones((3,), jnp.int32), cfg)
     assert float(rew[late]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# 4-way Traffic Junction semantics
+# ---------------------------------------------------------------------------
+
+def test_tj4_route_table_geometry():
+    """All 12 routes: in-bounds, unit-step-connected, lane-respecting,
+    boundary-to-boundary, and mutually distinct."""
+    s = 8
+    m = s // 2
+    table, lens = traffic_junction_4way._route_table(s)
+    assert table.shape == (12, s + 1, 2)
+    assert lens.min() == s - 1 and lens.max() == s + 1   # right < str < left
+    seen = set()
+    for r in range(12):
+        path = table[r, :lens[r]]
+        assert (path >= 0).all() and (path < s).all(), r
+        # consecutive cells are grid-adjacent (the car moves one cell/step)
+        assert (np.abs(np.diff(path, axis=0)).sum(axis=1) == 1).all(), r
+        # entry and exit on the grid boundary
+        assert path[0].min() == 0 or path[0].max() == s - 1, r
+        assert path[-1].min() == 0 or path[-1].max() == s - 1, r
+        # every cell sits on one of the four lanes
+        assert ((path[:, 0] == m) | (path[:, 0] == m - 1)
+                | (path[:, 1] == m) | (path[:, 1] == m - 1)).all(), r
+        seen.add(tuple(map(tuple, path)))
+        # padding slots repeat the exit cell (safe to clip prog into)
+        np.testing.assert_array_equal(table[r, lens[r]:],
+                                      np.broadcast_to(path[-1],
+                                                      (s + 1 - lens[r], 2)))
+    assert len(seen) == 12
+    # the four straight routes are the full-length lane traversals
+    for arm in range(4):
+        assert lens[arm * 3 + 1] == s
+
+
+def test_tj4_entries_feasible_and_routes_in_range():
+    cfg = traffic_junction_4way.EnvConfig(n_agents=8, p_arrive=0.9)
+    state = traffic_junction_4way.reset(jax.random.PRNGKey(0), cfg)
+    enter = np.asarray(state.enter_t)
+    route = np.asarray(state.route)
+    assert enter[0] == 0
+    assert (np.diff(enter) >= 1).all()
+    # every car can still clear its longest-possible route before max_steps
+    assert enter.max() <= cfg.max_steps - (cfg.size + 1) - 1
+    assert (0 <= route).all() and (route < traffic_junction_4way.N_ROUTES).all()
+
+
+def test_tj4_single_car_full_speed_clears_every_route():
+    cfg = traffic_junction_4way.EnvConfig(n_agents=1, size=8, max_steps=20)
+    for r in range(traffic_junction_4way.N_ROUTES):
+        state = traffic_junction_4way.reset(jax.random.PRNGKey(0), cfg)
+        state = state._replace(route=jnp.array([r], jnp.int32),
+                               enter_t=jnp.zeros((1,), jnp.int32))
+        done = jnp.zeros((), bool)
+        for _ in range(cfg.max_steps):
+            state, _, done = traffic_junction_4way.step(
+                state, jnp.ones((1,), jnp.int32), cfg)
+        assert bool(traffic_junction_4way.success(state)), r
+        assert bool(done), r
+
+
+def test_tj4_crossing_straights_collide_at_junction():
+    """An eastbound and a southbound car that both gas through the
+    intersection at the same time must collide on the shared cell."""
+    cfg = traffic_junction_4way.EnvConfig(n_agents=2, size=8, max_steps=40)
+    # route 1 = west arm straight (row m, cell (m, m-1) at index m-1);
+    # route 4 = north arm straight (col m-1, cell (m, m-1) at index m) —
+    # entering one step apart puts both on (m, m-1) at the same time
+    state = traffic_junction_4way.EnvState(
+        route=jnp.array([1, 4], jnp.int32),
+        enter_t=jnp.array([1, 0], jnp.int32),
+        prog=jnp.zeros((2,), jnp.int32),
+        collided=jnp.zeros((), bool),
+        cleared=jnp.zeros((), bool),
+        t=jnp.zeros((), jnp.int32))
+    collided = False
+    for _ in range(cfg.max_steps):
+        state, _, done = traffic_junction_4way.step(
+            state, jnp.ones((2,), jnp.int32), cfg)
+        collided = collided or bool(state.collided)
+        if bool(done):
+            break
+    assert collided
+    assert not bool(traffic_junction_4way.success(state))
+
+
+def test_tj4_braking_avoids_the_crossing_collision():
+    """Same geometry as above, but the eastbound car yields one step at
+    the junction mouth — the coordination communication must learn."""
+    cfg = traffic_junction_4way.EnvConfig(n_agents=2, size=8, max_steps=40)
+    state = traffic_junction_4way.EnvState(
+        route=jnp.array([1, 4], jnp.int32),
+        enter_t=jnp.array([1, 0], jnp.int32),
+        prog=jnp.zeros((2,), jnp.int32),
+        collided=jnp.zeros((), bool),
+        cleared=jnp.zeros((), bool),
+        t=jnp.zeros((), jnp.int32))
+    for i in range(cfg.max_steps):
+        a0 = 0 if i == 3 else 1      # yield exactly once before the junction
+        state, _, done = traffic_junction_4way.step(
+            state, jnp.array([a0, 1], jnp.int32), cfg)
+        if bool(done):
+            break
+    assert not bool(state.collided)
+    assert bool(traffic_junction_4way.success(state))
+
+
+def test_tj4_odd_size_rejected():
+    with pytest.raises(ValueError, match="even"):
+        traffic_junction_4way._route_table(7)
 
 
 # ---------------------------------------------------------------------------

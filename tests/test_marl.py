@@ -306,19 +306,33 @@ def test_history_carries_throughput_and_sparsity_metrics():
     assert hist[0]["mask_sparsity"] == pytest.approx(0.75, abs=0.15)
 
 
-def test_pmap_data_parallel_path_runs():
-    """tcfg.parallel splits the env batch across devices with grad pmean.
-
-    Needs >1 device, which must be forced before JAX initializes — hence a
-    subprocess with XLA_FLAGS rather than an in-process test.
-    """
+def _run_forced_devices(code: str, n_devices: int):
+    """Run ``code`` in a subprocess with ``n_devices`` forced CPU devices
+    (the flag must be set before JAX initializes — hence a subprocess)."""
     import os
     import pathlib
     import subprocess
     import sys
 
     root = pathlib.Path(__file__).resolve().parents[1]
-    code = (
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={n_devices}",
+        JAX_PLATFORMS="cpu",
+        PYTHONPATH=f"{root / 'src'}"
+                   f"{os.pathsep + os.environ['PYTHONPATH'] if os.environ.get('PYTHONPATH') else ''}")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         cwd=root, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr
+
+
+def test_deprecated_parallel_alias_runs_on_forced_devices():
+    """tcfg.parallel (the retired pmap switch) must keep working: it now
+    routes to a 1-D env-only mesh over the local devices, with a
+    DeprecationWarning."""
+    _run_forced_devices(
+        "import warnings\n"
         "import jax, numpy as np\n"
         "assert jax.local_device_count() == 2\n"
         "from repro.marl import ic3net, train as T, envs\n"
@@ -326,16 +340,117 @@ def test_pmap_data_parallel_path_runs():
         "env, ecfg = envs.make('predator_prey', n_agents=2, size=3,"
         " max_steps=6)\n"
         "tcfg = T.TrainConfig(batch=4, parallel=True)\n"
-        "_, hist = T.train(cfg, ecfg, tcfg, iterations=4, seed=0)\n"
+        "with warnings.catch_warnings(record=True) as w:\n"
+        "    warnings.simplefilter('always')\n"
+        "    _, hist = T.train(cfg, ecfg, tcfg, iterations=4, seed=0)\n"
+        "assert any(issubclass(c.category, DeprecationWarning) for c in w)\n"
         "assert len(hist) == 4\n"
-        "assert all(np.isfinite(h['loss']) for h in hist), hist\n"
-    )
-    env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=2",
-               JAX_PLATFORMS="cpu",
-               PYTHONPATH=f"{root / 'src'}"
-                          f"{os.pathsep + os.environ['PYTHONPATH'] if os.environ.get('PYTHONPATH') else ''}")
-    out = subprocess.run([sys.executable, "-c", code], env=env,
-                         cwd=root, capture_output=True, text=True,
-                         timeout=600)
-    assert out.returncode == 0, out.stderr
+        "assert all(np.isfinite(h['loss']) for h in hist), hist\n",
+        n_devices=2)
+
+
+def _train_all_paths(cfg, ecfg, iterations, schedule=None, batch=4,
+                     log_every=0):
+    """(host, scan, mesh(1,1), parallel-alias) runs of one config."""
+    import warnings as w
+    runs = {}
+    for name, tcfg, host in (
+            ("host", train_mod.TrainConfig(batch=batch), True),
+            ("scan", train_mod.TrainConfig(batch=batch), False),
+            ("mesh", train_mod.TrainConfig(batch=batch, mesh=(1, 1)), False),
+            ("alias", train_mod.TrainConfig(batch=batch, parallel=True),
+             False)):
+        with w.catch_warnings():
+            w.simplefilter("ignore", DeprecationWarning)
+            runs[name] = train_mod.train(
+                cfg, ecfg, tcfg, iterations=iterations, seed=0,
+                schedule=schedule, host_loop=host, log_every=log_every)
+    return runs
+
+
+def _assert_params_equal(pa, pb, bitwise=True):
+    for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+        if bitwise:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+
+
+def test_mesh_path_three_way_parity_dense():
+    """Single device: the mesh path must train BITWISE-identically to the
+    plain scan and the deprecated parallel alias (all three trace the same
+    _scan_chunk), and match the host loop — the scale-out substrate cannot
+    change the numbers it scales."""
+    cfg = ic3net.IC3NetConfig(hidden=16)
+    ecfg = env_mod.EnvConfig(n_agents=2, size=3, max_steps=6)
+    runs = _train_all_paths(cfg, ecfg, iterations=5)
+    _assert_params_equal(runs["scan"][0], runs["mesh"][0])
+    _assert_params_equal(runs["mesh"][0], runs["alias"][0])
+    _assert_params_equal(runs["host"][0], runs["mesh"][0], bitwise=False)
+    np.testing.assert_allclose([h["loss"] for h in runs["host"][1]],
+                               [h["loss"] for h in runs["mesh"][1]],
+                               rtol=1e-4)
+
+
+def test_mesh_path_three_way_parity_grouped_refresh_in_window():
+    """Grouped path with a refresh_every boundary landing *inside* a scan
+    window (it=3 of a 5-iteration window): the PlanState carry must
+    refresh identically on the host loop, the scan and the mesh path."""
+    from repro.core.schedule import SparsitySchedule
+    cfg = ic3net.IC3NetConfig(hidden=16, flgw_groups=4, flgw_path="grouped")
+    ecfg = env_mod.EnvConfig(n_agents=2, size=3, max_steps=6)
+    sched = SparsitySchedule(groups=4, refresh_every=3)
+    runs = _train_all_paths(cfg, ecfg, iterations=5, schedule=sched,
+                            log_every=5)
+    _assert_params_equal(runs["scan"][0], runs["mesh"][0])
+    _assert_params_equal(runs["mesh"][0], runs["alias"][0])
+    _assert_params_equal(runs["host"][0], runs["mesh"][0], bitwise=False)
+    np.testing.assert_allclose([h["loss"] for h in runs["host"][1]],
+                               [h["loss"] for h in runs["mesh"][1]],
+                               rtol=1e-4)
+
+
+def test_mesh_axes_actually_partition_on_forced_devices():
+    """Forced 4-device host, (2 env x 2 agent) mesh: the env and agent
+    constraints must produce PARTITIONED shardings (no silent full
+    replication — the failure mode where a logical rule or divisibility
+    drop silently replicates everything), the lowered train chunk must
+    carry those shardings, and a grouped mesh run with a refresh inside
+    the window must train finite."""
+    _run_forced_devices(
+        "import jax, jax.numpy as jnp, numpy as np\n"
+        "assert jax.local_device_count() == 4\n"
+        "from repro.core.schedule import SparsitySchedule\n"
+        "from repro.launch.mesh import make_marl_mesh\n"
+        "from repro.marl import ic3net, train as T, envs\n"
+        "from repro.sharding import partition\n"
+        "mesh = make_marl_mesh(env=2, agent=2)\n"
+        "with mesh, partition.use_constraints(mesh):\n"
+        "    ke = jax.jit(lambda x: partition.constrain(x, ('env', None)))("
+        "jnp.zeros((4, 2)))\n"
+        "    ag = jax.jit(lambda x: partition.constrain(x, ('agent', None)))("
+        "jnp.zeros((4, 8)))\n"
+        "assert not ke.sharding.is_fully_replicated, ke.sharding\n"
+        "assert not ag.sharding.is_fully_replicated, ag.sharding\n"
+        "assert 'env' in str(ke.sharding.spec)\n"
+        "assert 'agent' in str(ag.sharding.spec)\n"
+        "cfg = ic3net.IC3NetConfig(hidden=16, flgw_groups=4,"
+        " flgw_path='grouped')\n"
+        "env, ecfg = envs.make('predator_prey', n_agents=4, size=3,"
+        " max_steps=6)\n"
+        "sched = SparsitySchedule(groups=4, refresh_every=3)\n"
+        "cfg2, key, params, opt = T._init(cfg, ecfg, env, seed=0)\n"
+        "plans = T._encode_plans(params, cfg2)\n"
+        "tcfg = T.TrainConfig(batch=4, mesh=(2, 2))\n"
+        "chunk = T.make_mesh_chunk(mesh)\n"
+        "with T._mesh_contexts(mesh):\n"
+        "    lowered = chunk.lower(params, opt, key, plans,\n"
+        "        jnp.zeros((), jnp.int32), 5, cfg2, ecfg, tcfg, env, sched)\n"
+        "txt = lowered.as_text()\n"
+        "assert 'devices=[' in txt, 'no partitioned sharding in the chunk'\n"
+        "_, hist = T.train(cfg, ecfg, tcfg, iterations=5, seed=0,"
+        " schedule=sched, log_every=5)\n"
+        "assert len(hist) == 5\n"
+        "assert all(np.isfinite(h['loss']) for h in hist), hist\n",
+        n_devices=4)

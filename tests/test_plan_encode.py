@@ -127,3 +127,63 @@ def test_axis0_matches_transposed_axis1():
     a0 = np.asarray(pe_ops.balanced_assign(og, axis=0, slack=1.25))
     a1 = np.asarray(pe_ops.balanced_assign(og.T, axis=1, slack=1.25))
     np.testing.assert_array_equal(a0, a1)
+
+
+# ---------------------------------------------------------------------------
+# Implementation-selection policy (resolve_impl)
+# ---------------------------------------------------------------------------
+
+def test_resolve_impl_policy():
+    """The single impl-selection policy, exposed for tests: explicit
+    choices bind, the shared reference switch and the size cap drive the
+    implicit fallbacks."""
+    import repro.kernels as kernels_mod
+    big = pe_ops._MAX_ITEMS + 1
+    assert pe_ops.resolve_impl(64) == "pallas"
+    assert pe_ops.resolve_impl(64, "pallas") == "pallas"
+    assert pe_ops.resolve_impl(64, "reference") == "reference"
+    assert pe_ops.resolve_impl(big, "reference") == "reference"
+    with kernels_mod.use_reference_impl():
+        assert pe_ops.resolve_impl(64) == "reference"
+        # explicit choice beats the ambient switch
+        assert pe_ops.resolve_impl(64, "pallas") == "pallas"
+    pe_ops._size_fallback_warned = True       # silence for this check
+    assert pe_ops.resolve_impl(big) == "reference"
+    with pytest.raises(ValueError, match="impl must be"):
+        pe_ops.resolve_impl(64, "mystery")
+
+
+def test_explicit_pallas_above_cap_raises():
+    """impl='pallas' is a contract, not a hint: above the VMEM tile cap it
+    must raise a pointed error instead of silently running the lexsort
+    reference (the pre-fix behavior, which made kernel perf runs lie)."""
+    big = pe_ops._MAX_ITEMS + 8
+    scores = jnp.zeros((big, 4))
+    with pytest.raises(ValueError, match="_MAX_ITEMS"):
+        pe_ops.balanced_assign(scores, axis=1, impl="pallas")
+    # axis=0 counts columns as items
+    with pytest.raises(ValueError, match="_MAX_ITEMS"):
+        pe_ops.balanced_assign(jnp.zeros((4, big)), axis=0, impl="pallas")
+    # ...and under the cap the explicit request is honoured
+    assert pe_ops.resolve_impl(pe_ops._MAX_ITEMS, "pallas") == "pallas"
+
+
+def test_implicit_size_fallback_warns_once_and_matches_reference():
+    """Implicit oversize encodes fall back to the reference with ONE
+    RuntimeWarning per process — and stay bitwise-identical to it."""
+    import warnings as w
+    big = pe_ops._MAX_ITEMS + 8
+    scores = jax.random.normal(jax.random.PRNGKey(3), (big, 4))
+    pe_ops._size_fallback_warned = False
+    try:
+        with pytest.warns(RuntimeWarning, match="lexsort reference"):
+            got = pe_ops.balanced_assign(scores, axis=1)
+        ref = np.asarray(pe_ref.ref_balanced_assign(scores, 1.0))
+        np.testing.assert_array_equal(np.asarray(got), ref)
+        with w.catch_warnings(record=True) as caught:
+            w.simplefilter("always")
+            pe_ops.balanced_assign(scores * 2.0, axis=1)
+        assert not any(issubclass(c.category, RuntimeWarning)
+                       for c in caught), caught
+    finally:
+        pe_ops._size_fallback_warned = True

@@ -1,0 +1,148 @@
+"""Serving-side plan staleness (the last ROADMAP encoder follow-up).
+
+``init_cache(params=...)`` encodes the serving PlanState once and every
+decode step trusts ``cache["plans"]`` — correct while params are frozen,
+wrong the moment online tuning moves them *between* requests: the grouped
+kernels would decode against metadata of weights that no longer exist.
+These tests pin the fix: the prefill/serve boundary certifies the cached
+plans via ``plan_signature`` and re-encodes iff stale. They fail on the
+pre-fix code (prefill consumed caller plans unconditionally; no boundary
+hook existed).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import encoder
+from repro.models import transformer
+from repro.train import step as step_lib
+
+
+def _cfg():
+    return registry.get_smoke_config("gemma2_2b", flgw_groups=4,
+                                     flgw_path="grouped",
+                                     flgw_targets=("mlp",))
+
+
+def _flip_grouping(params):
+    """Simulated online-tuning update that moves every balanced-deal
+    layout: negating ig/og swaps each row/col's argmax preference."""
+    flipped = jax.tree.map(lambda x: x, params)      # fresh containers
+    for _, p in encoder.iter_flgw_layers(flipped):
+        p["ig"] = -p["ig"]
+        p["og"] = -p["og"]
+    return flipped
+
+
+def _batch(b=1, s=8, vocab=128):
+    toks = jax.random.randint(jax.random.PRNGKey(9), (b, s), 0, vocab,
+                              jnp.int32)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return {"tokens": toks, "positions": pos}
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = _cfg()
+    params, _ = transformer.lm_init(jax.random.PRNGKey(0), cfg)
+    cache = transformer.init_cache(cfg, 1, 8, params=params)
+    assert isinstance(cache["plans"], encoder.PlanState)
+    return cfg, params, cache
+
+
+def test_refresh_cache_plans_fires_and_matches_fresh_encode(served):
+    """Params mutated between requests: the boundary hook must detect the
+    moved layout and hand back exactly a fresh encode's PlanState."""
+    cfg, params, cache = served
+    serve = jax.jit(step_lib.make_serve_step(cfg))
+    tok = jnp.zeros((1, 1), jnp.int32)
+    pos = jnp.zeros((1, 1), jnp.int32)
+    _, cache = serve(params, cache, tok, pos)        # request 1 decodes
+
+    params2 = _flip_grouping(params)                 # online tuning
+    refreshed = transformer.refresh_cache_plans(params2, cfg, cache)
+    fresh = transformer.encode_plans(params2, cfg)
+    # the refresh fired: new signature, different from the stale one...
+    assert int(refreshed["plans"].sig) == int(fresh.sig)
+    assert int(refreshed["plans"].sig) != int(cache["plans"].sig)
+    # ...and the plans are bitwise a fresh encode
+    for a, b in zip(jax.tree.leaves(refreshed["plans"]),
+                    jax.tree.leaves(fresh)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # KV buffers ride through untouched
+    for a, b in zip(jax.tree.leaves(refreshed["blocks"]),
+                    jax.tree.leaves(cache["blocks"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_refresh_cache_plans_is_a_noop_when_params_unchanged(served):
+    """No layout movement ⇒ the cached plans pass through bitwise (the
+    amortization contract: half a signature pass, zero encodes)."""
+    cfg, params, cache = served
+    same = transformer.refresh_cache_plans(params, cfg, dict(cache))
+    for a, b in zip(jax.tree.leaves(same["plans"]),
+                    jax.tree.leaves(cache["plans"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_refresh_cache_plans_passes_planless_cache_through():
+    cfg = _cfg().with_updates(flgw_groups=1, flgw_path="masked")
+    cache = transformer.init_cache(cfg, 1, 8)
+    assert cache["plans"] == ()
+    same = transformer.refresh_cache_plans({}, cfg, cache)
+    assert same["plans"] == ()
+
+
+def test_prefill_certifies_caller_supplied_plans(served):
+    """The prefill boundary must no longer trust a caller-passed PlanState:
+    stale plans (encoded from the pre-update params) must produce the same
+    logits as a fresh encode. Fails pre-fix, where prefill consumed them
+    unconditionally."""
+    cfg, params, cache = served
+    params2 = _flip_grouping(params)
+    stale = cache["plans"]                 # encoded from `params`
+    fresh = transformer.encode_plans(params2, cfg)
+    batch = _batch(vocab=cfg.vocab)
+    prefill = step_lib.make_prefill_step(cfg)
+    out_certified = prefill(params2, batch, plans=stale)
+    out_fresh = prefill(params2, batch, plans=fresh)
+    np.testing.assert_array_equal(np.asarray(out_certified),
+                                  np.asarray(out_fresh))
+    # the guard is meaningful: consuming the stale plans raw DOES change
+    # the forward (this is exactly the pre-fix serving corruption)
+    h_stale, _, _ = transformer.lm_apply(
+        params2, cfg, batch["tokens"], batch["positions"],
+        plans=stale.plans, return_hidden=True)
+    h_fresh, _, _ = transformer.lm_apply(
+        params2, cfg, batch["tokens"], batch["positions"],
+        plans=fresh.plans, return_hidden=True)
+    assert not np.allclose(np.asarray(h_stale), np.asarray(h_fresh))
+
+
+def test_serve_step_refresh_plans_flag_heals_a_stale_cache(served):
+    """make_serve_step(refresh_plans=True) builds the certification into
+    every decode step: a stale cache decodes identically to one freshly
+    encoded from the updated params; the default step (trusting the
+    cache) does not."""
+    cfg, params, cache0 = served
+    params2 = _flip_grouping(params)
+    stale_cache = transformer.init_cache(cfg, 1, 8, params=params)
+    fresh_cache = transformer.init_cache(cfg, 1, 8, params=params2)
+    tok = jnp.zeros((1, 1), jnp.int32)
+    pos = jnp.zeros((1, 1), jnp.int32)
+
+    healing = jax.jit(step_lib.make_serve_step(cfg, refresh_plans=True))
+    t_healed, c_healed = healing(params2, stale_cache, tok, pos)
+    t_fresh, c_fresh = healing(params2, fresh_cache, tok, pos)
+    np.testing.assert_array_equal(np.asarray(t_healed), np.asarray(t_fresh))
+    assert int(c_healed["plans"].sig) == int(c_fresh["plans"].sig)
+    for a, b in zip(jax.tree.leaves(c_healed["blocks"]),
+                    jax.tree.leaves(c_fresh["blocks"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    trusting = jax.jit(step_lib.make_serve_step(cfg))
+    stale_cache2 = transformer.init_cache(cfg, 1, 8, params=params)
+    _, c_trust = trusting(params2, stale_cache2, tok, pos)
+    assert int(c_trust["plans"].sig) != int(c_fresh["plans"].sig)
