@@ -8,6 +8,7 @@ import time
 import jax
 
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -51,6 +52,38 @@ def save(name: str, payload) -> pathlib.Path:
     RESULTS.mkdir(parents=True, exist_ok=True)
     path = RESULTS / f"{name}.json"
     path.write_text(json.dumps(payload, indent=1, default=float))
+    return path
+
+
+def write_bench_json(name: str, payload: dict, *,
+                     out_dir: pathlib.Path = REPO_ROOT) -> pathlib.Path:
+    """Persist a benchmark's committed artifact as ``BENCH_<name>.json``.
+
+    Unlike :func:`save` (scratch copies under the gitignored
+    ``benchmarks/results/``), these land at the repo root so runs can be
+    committed and diffed. Every figure script routes its canonical output
+    through here with the same shape::
+
+        {"bench": <name>, "config": {...knobs...},
+         "results": {...medians...}, "acceptance": {flag: bool, ...}}
+
+    ``config`` / ``results`` / ``acceptance`` are required so artifacts
+    stay machine-comparable across PRs; extra top-level keys pass
+    through. Timings inside ``results`` should be medians (``timeit`` or
+    ``timeit_interleaved(..., stat="median")``) — committed numbers need
+    the estimator that's robust on a wandering shared host.
+    """
+    missing = [k for k in ("config", "results", "acceptance")
+               if k not in payload]
+    if missing:
+        raise ValueError(f"bench payload for {name!r} missing {missing}")
+    bad = [k for k, v in payload["acceptance"].items()
+           if not isinstance(v, bool)]
+    if bad:
+        raise ValueError(f"acceptance flags must be plain bools: {bad}")
+    doc = {"bench": name, **payload}
+    path = pathlib.Path(out_dir) / f"BENCH_{name}.json"
+    path.write_text(json.dumps(doc, indent=1, default=float) + "\n")
     return path
 
 

@@ -22,7 +22,7 @@ real `train()` calls on this host instead of synthetic shapes.
 """
 from __future__ import annotations
 
-from benchmarks.common import row, save
+from benchmarks.common import row, save, write_bench_json
 
 # IC3Net dims (hidden 128), paper setup
 H = 128
@@ -77,6 +77,24 @@ def main() -> dict:
         "paper_g16_gflops": 3629.48,
     }
     save("fig11_throughput", out)
+    mc = out["model_check"]
+    write_bench_json("fig11_throughput", {
+        "config": {"fpga_peak_gflops": FPGA_PEAK,
+                   "util_dense": FPGA_UTIL_DENSE,
+                   "util_sparse": FPGA_UTIL_SPARSE,
+                   "power_w": FPGA_POWER_W},
+        "results": {"model_check": mc, "cells": out["cells"]},
+        "acceptance": {
+            # the utilization model lands within 10% of the paper's
+            # measured dense point...
+            "dense_within_10pct_of_paper":
+                abs(mc["dense_gflops"] - mc["paper_dense_gflops"])
+                / mc["paper_dense_gflops"] < 0.10,
+            # ...and its idealized linear-in-G sparse scaling upper-
+            # bounds the paper's measured G=16 point, as it must
+            "g16_upper_bounds_paper_anchor":
+                mc["g16_gflops"] >= mc["paper_g16_gflops"],
+        }})
     return out
 
 
@@ -131,6 +149,17 @@ def real_sweep(iterations: int = 24, hidden: int = 64,
             f"{cell['sparse_gflops']:.3f}", f"{cell['mask_sparsity']:.3f}")
         out["cells"].append({"sweep": sweep, "value": value, **cell})
     save("fig11_throughput_real", out)
+    write_bench_json("fig11_throughput_real", {
+        "config": {"iterations": iterations, "hidden": hidden,
+                   "mesh": list(mesh) if mesh else None},
+        "results": {"cells": out["cells"]},
+        "acceptance": {
+            "all_points_trained":
+                all(c["steps_per_s"] > 0 for c in out["cells"]),
+            "grouped_sparsity_tracks_g":
+                all(c["mask_sparsity"] > 0.5 for c in out["cells"]
+                    if c["sweep"] == "groups" and c["value"] >= 4),
+        }})
     return out
 
 

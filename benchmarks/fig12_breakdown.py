@@ -26,7 +26,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import row, save, timeit, timeit_interleaved
+from benchmarks.common import (row, save, timeit, timeit_interleaved,
+                               write_bench_json)
 from repro.core.flgw import FLGWConfig, init_grouping
 from repro.core.grouped import grouped_apply, make_plan
 
@@ -74,6 +75,28 @@ def main() -> dict:
     row("# falling further as batch grows — same trend here.")
     out["amortization"] = amortization()
     save("fig12_breakdown", out)
+    am = out["amortization"]
+    write_bench_json("fig12_breakdown", {
+        "config": {"layers": LAYERS, "m": M, "n": N},
+        "results": {"cells": out["cells"], "amortization": am},
+        "acceptance": {
+            "refresh4_beats_per_call": am["refresh_4"]["speedup"] > 1.0,
+            "on_change_beats_tracking_fixed":
+                bool(am["on_change_beats_tracking_fixed"]),
+            # the paper's ~2.9% OSEL share lands here too for the
+            # production-shaped G (G<=4 cells stay single-digit)...
+            "encode_share_single_digit_below_g16": all(
+                c["share_pct"] < 10.0 for c in out["cells"]
+                if c["G"] <= 4),
+            # ...and where compute genuinely scales with batch on this
+            # host (G=16: the compact matmul dominates dispatch), the
+            # share falls as batch grows, the paper's Fig 12 trend
+            "share_falls_with_batch_at_g16":
+                next(c for c in out["cells"]
+                     if c["G"] == 16 and c["batch"] == 32)["share_pct"]
+                < next(c for c in out["cells"]
+                       if c["G"] == 16 and c["batch"] == 1)["share_pct"],
+        }})
     return out
 
 

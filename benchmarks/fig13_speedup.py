@@ -19,7 +19,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import row, save, timeit, timeit_interleaved
+from benchmarks.common import (row, save, timeit, timeit_interleaved,
+                               write_bench_json)
 from repro.core.flgw import FLGWConfig, init_grouping
 from repro.core.grouped import grouped_apply
 
@@ -72,7 +73,7 @@ def _decode_pair(g: int):
     zero-arg fn dict for ``timeit_interleaved``."""
     from repro.models import transformer
     from repro.models.config import ModelConfig
-    from repro.train import step as step_lib
+    from repro.serving import steps as serving_steps
 
     cfg = ModelConfig(
         name=f"fig13_decode_g{g}", family="dense", n_layers=2, d_model=64,
@@ -82,7 +83,7 @@ def _decode_pair(g: int):
     params, _ = transformer.lm_init(jax.random.PRNGKey(5), cfg)
     cache_cached = transformer.init_cache(cfg, B_DEC, 32, params=params)
     cache_bare = transformer.init_cache(cfg, B_DEC, 32)
-    serve = jax.jit(step_lib.make_serve_step(cfg))
+    serve = jax.jit(serving_steps.make_decode_step(cfg))
     tok = jnp.zeros((B_DEC, 1), jnp.int32)
     return {"cached": lambda: serve(params, cache_cached, tok, tok),
             "percall": lambda: serve(params, cache_bare, tok, tok)}
@@ -130,6 +131,18 @@ def main() -> dict:
     row("# The TPU column is the SPMD-verified compact-path compute ratio")
     row("# (dry-run measured 0.40x dense at G=4 = slack^2/G; see §Perf A6).")
     save("fig13_speedup", out)
+    write_bench_json("fig13_speedup", {
+        "config": {"layers": LAYERS, "m": M, "n": N, "batch": B,
+                   "decode_batch": B_DEC, "capacity_slack": slack},
+        "results": {"dense_inference_s": t_inf_dense,
+                    "dense_training_s": t_tr_dense, "cells": out["cells"]},
+        "acceptance": {
+            "speedup_grows_with_g":
+                out["cells"][-1]["inference_speedup"]
+                > out["cells"][0]["inference_speedup"],
+            "decode_amortization_wins_majority":
+                out["decode_amortization_wins"] * 2 > len(out["cells"]),
+        }})
     return out
 
 

@@ -1,0 +1,154 @@
+"""fig14_serving: continuous batching vs lockstep on the serving tier.
+
+The paper's accelerator keeps the sparse datapath busy by overlapping
+plan (OSEL) generation with compute; the serving-tier analogue is
+keeping the decode batch full. This benchmark drives one plan-aware
+:class:`repro.serving.ServeSession` (tiny grouped model, the fig13
+``_decode_pair`` config) through the same open-loop Geometric request
+stream under both admission disciplines of ``repro.serving.Engine``:
+
+* ``lockstep``   — static batching: a batch admits only into an all-free
+  engine and runs to its slowest member;
+* ``continuous`` — slot-based continuous batching: a finished request's
+  slot takes the next prefill while its neighbours keep decoding.
+
+Both run the *same* jitted unified step over the *same* per-slot cache
+at the same capacity, so the gap isolates the scheduling discipline:
+continuous needs ~total_work/capacity steps where lockstep needs
+sum-of-batch-maxima, and with one compiled program per step, tokens/s
+follows the step count. Latency is wall time from a request's arrival
+tick to its completion. The plan cache is cleared first so the run also
+certifies the one-encode-per-params-version invariant end to end.
+
+  PYTHONPATH=src python benchmarks/fig14_serving.py [--check] [--no-write]
+
+``--check`` exits nonzero unless every acceptance flag holds (CI);
+``--no-write`` keeps CI smoke runs from overwriting the committed
+``BENCH_serving.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, save, write_bench_json
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.serving import Engine, ServeSession, plan_cache, synthetic_requests
+from repro.serving.stream import max_seq_for
+
+GROUPS = 4
+
+
+def _config() -> ModelConfig:
+    return ModelConfig(
+        name="fig14_serving", family="dense", n_layers=2, d_model=64,
+        n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128, vocab=256,
+        flgw_groups=GROUPS, flgw_path="grouped",
+        flgw_targets=("mlp", "attn"), dtype=jnp.float32, remat=False)
+
+
+def run(n_requests: int = 24, capacity: int = 4, p_arrive: float = 0.5,
+        seed: int = 0, reps: int = 5) -> dict:
+    cfg = _config()
+    params, _ = transformer.lm_init(jax.random.PRNGKey(3), cfg)
+    plan_cache.clear()
+    session = ServeSession(cfg, params, plan_policy="certify")
+
+    requests = synthetic_requests(seed, n_requests, vocab=cfg.vocab,
+                                  p_arrive=p_arrive, prompt_len=(4, 12),
+                                  gen_len=(4, 16))
+    max_seq = max_seq_for(requests)
+    engines = {mode: Engine(session, capacity=capacity, max_seq=max_seq,
+                            admission=mode)
+               for mode in ("continuous", "lockstep")}
+
+    # Warm the single compiled step (shared by both modes) plus the
+    # reset_slots jit so the timed reps measure scheduling, not XLA.
+    warm = synthetic_requests(seed + 1, 2, vocab=cfg.vocab,
+                              prompt_len=(4, 12), gen_len=(4, 16))
+    for eng in engines.values():
+        eng.run(warm)
+
+    # Interleave reps so host-load drift hits both disciplines equally,
+    # then report each mode's median-throughput rep (medians, per
+    # benchmarks/common house rules for committed numbers).
+    reports = {mode: [] for mode in engines}
+    for _ in range(reps):
+        for mode, eng in engines.items():
+            reports[mode].append(eng.run(requests))
+    med = {mode: sorted(rs, key=lambda r: r.tokens_per_s)[len(rs) // 2]
+           for mode, rs in reports.items()}
+
+    pc = plan_cache.stats()
+    cont, lock = med["continuous"], med["lockstep"]
+    out = {
+        "config": {"model": cfg.name, "groups": GROUPS,
+                   "targets": list(cfg.flgw_targets),
+                   "requests": n_requests, "capacity": capacity,
+                   "p_arrive": p_arrive, "seed": seed, "reps": reps,
+                   "max_seq": max_seq, "plan_policy": "certify"},
+        "results": {mode: med[mode].summary() for mode in med},
+        "acceptance": {
+            "continuous_beats_lockstep_tokens_per_s":
+                cont.tokens_per_s > lock.tokens_per_s,
+            "continuous_fewer_steps": cont.steps < lock.steps,
+            "all_requests_completed": all(
+                len(r.records) == n_requests
+                and all(rec.completed >= 0 for rec in r.records)
+                for rs in reports.values() for r in rs),
+            "single_plan_encode": pc["encodes"] == 1,
+        },
+    }
+    out["results"]["plan_cache"] = dict(pc)
+    out["results"]["speedup_tokens_per_s"] = (
+        cont.tokens_per_s / lock.tokens_per_s)
+
+    row("# fig14_serving: continuous vs lockstep admission, "
+        f"{n_requests} requests, capacity {capacity}, "
+        f"p_arrive {p_arrive}, median of {reps} interleaved reps")
+    row("mode", "steps", "tok_per_s", "slot_util_%", "p50_ms", "p99_ms")
+    for mode in ("lockstep", "continuous"):
+        s = med[mode].summary()
+        row(mode, s["steps"], f"{s['tokens_per_s']:.1f}",
+            f"{100 * s['slot_utilization']:.0f}",
+            f"{1e3 * s['p50_s']:.1f}", f"{1e3 * s['p99_s']:.1f}")
+    row(f"# continuous/lockstep tokens-per-s: "
+        f"{out['results']['speedup_tokens_per_s']:.2f}x; plan encodes "
+        f"across {2 * reps + 2} engine runs: {pc['encodes']}")
+    for flag, ok in out["acceptance"].items():
+        row(f"# acceptance {flag}:", ok)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--capacity", type=int, default=4)
+    ap.add_argument("--p-arrive", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless every acceptance flag holds")
+    ap.add_argument("--no-write", action="store_true",
+                    help="skip BENCH_serving.json (CI smoke runs must not "
+                         "overwrite the committed artifact)")
+    args = ap.parse_args(argv)
+
+    out = run(n_requests=args.requests, capacity=args.capacity,
+              p_arrive=args.p_arrive, seed=args.seed, reps=args.reps)
+    save("fig14_serving", out)
+    if not args.no_write:
+        write_bench_json("serving", out)
+    if args.check and not all(out["acceptance"].values()):
+        row("# CHECK FAILED:", {k: v for k, v in out["acceptance"].items()
+                                if not v})
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

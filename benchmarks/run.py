@@ -17,13 +17,17 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (fig10_osel, fig11_throughput, fig12_breakdown,
-                            fig13_speedup, table1_balance)
+                            fig13_speedup, fig14_serving, table1_balance)
     jobs = [
         ("fig10_osel (OSEL cycles/memory)", fig10_osel.main),
         ("table1_balance (workload deviation)", table1_balance.main),
         ("fig11_throughput (accelerator model)", fig11_throughput.main),
         ("fig12_breakdown (sparse-gen share)", fig12_breakdown.main),
         ("fig13_speedup (sparse vs dense)", fig13_speedup.main),
+        # --no-write: the committed BENCH_serving.json is refreshed only
+        # by an explicit benchmarks.fig14_serving run
+        ("fig14_serving (continuous batching)",
+         lambda: fig14_serving.main(["--no-write"])),
     ]
     if not args.fast:
         from benchmarks import fig9_accuracy

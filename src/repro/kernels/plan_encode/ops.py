@@ -28,8 +28,32 @@ from repro.kernels.plan_encode.plan_encode import assign_slots
 # encode is off the hot path, so just use the XLA reference there.
 _MAX_ITEMS = 4096
 
-# The implicit size fallback warns once per process (flag reset by tests).
+# The implicit size fallback warns once per process. Mutate it only
+# through the helpers below — direct writes from tests used to leak
+# between test files (the last writer decided whether any later oversize
+# encode in the same process could warn at all).
 _size_fallback_warned = False
+
+
+def size_fallback_warned() -> bool:
+    """Whether the once-per-process oversize-fallback warning has fired."""
+    return _size_fallback_warned
+
+
+def reset_size_fallback_warning(warned: bool = False) -> bool:
+    """Set the once-per-process warning latch; returns the previous value.
+
+    ``reset_size_fallback_warning()`` re-arms the warning (a test that
+    asserts on it fires regardless of what ran earlier in the process);
+    ``reset_size_fallback_warning(True)`` silences it for noise-sensitive
+    blocks. Pair with the returned previous value — or rely on the
+    autouse fixture in ``tests/conftest.py``, which snapshots and
+    restores the latch around every test.
+    """
+    global _size_fallback_warned
+    prev = _size_fallback_warned
+    _size_fallback_warned = bool(warned)
+    return prev
 
 
 def resolve_impl(items: int, impl: str | None = None) -> str:

@@ -40,6 +40,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.models import transformer
 from repro.sharding import partition
 from repro.train import state as state_lib
+from repro.serving import steps as serving_steps
 from repro.train import step as step_lib
 
 RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / \
@@ -101,7 +102,7 @@ def build_cell(cfg, shape_name: str, mesh, *, banded: bool = False,
     param_sh = partition.constrained_shardings(pspecs, aparams, mesh, rules)
 
     if kind == "prefill":
-        fn = step_lib.make_prefill_step(cfg, banded=banded, **chunk_kw)
+        fn = serving_steps.make_prefill_step(cfg, banded=banded, **chunk_kw)
         jf = jax.jit(fn, in_shardings=(param_sh, in_batch_shardings))
         return jf, (aparams, inputs)
 
@@ -114,8 +115,8 @@ def build_cell(cfg, shape_name: str, mesh, *, banded: bool = False,
         aparams)
     cache_sh = partition.constrained_shardings(
         transformer.cache_specs(cfg), acache, mesh, rules)
-    fn = step_lib.make_serve_step(cfg, banded=banded,
-                                  unroll_blocks=cost_mode)
+    fn = serving_steps.make_decode_step(cfg, banded=banded,
+                                        unroll_blocks=cost_mode)
     tok_sh = in_batch_shardings["tokens"]
     jf = jax.jit(fn, in_shardings=(param_sh, cache_sh, tok_sh, tok_sh),
                  out_shardings=(None, cache_sh), donate_argnums=(1,))

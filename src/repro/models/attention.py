@@ -123,17 +123,40 @@ def attention(p, x, positions, cfg, *, window: int = 0, causal: bool = True,
         # cache-free path.
         pos = cache["pos"]
         t = cache["k"].shape[1]
-        write = pos % t
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, write, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, write, axis=1)
+        if jnp.ndim(pos) == 0:
+            # lockstep cache: every batch row shares one stream offset
+            write = pos % t
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, write,
+                                                     axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, write,
+                                                     axis=1)
+            idx = jnp.arange(t, dtype=jnp.int32)
+            # Absolute position held by each ring slot after the write: the
+            # largest p ≤ pos with p ≡ idx (mod L); negative ⇒ never written.
+            k_pos = (pos - jnp.mod(pos - idx, t))[None]
+            k_valid = (k_pos >= 0)
+        else:
+            # per-slot cache (``init_cache(per_slot=True)``): ``pos`` is
+            # (B,) — each batch row is an independent request stream at its
+            # own offset, the continuous-batching contract. Same ring-buffer
+            # semantics, applied row-wise; a slot reset to pos=0 invalidates
+            # its stale KV for free (every unwritten ring index maps to a
+            # negative absolute position below).
+            if s != 1:
+                raise ValueError(
+                    "per-slot decode caches take single-token steps "
+                    f"(got {s} tokens); multi-token prefill goes through "
+                    "the cache-free path one token at a time")
+            write = pos % t                                    # (B,)
+            rows = jnp.arange(b)
+            ck = cache["k"].at[rows, write].set(k[:, 0])
+            cv = cache["v"].at[rows, write].set(v[:, 0])
+            idx = jnp.arange(t, dtype=jnp.int32)
+            k_pos = pos[:, None] - jnp.mod(pos[:, None] - idx[None], t)
+            k_valid = k_pos >= 0                               # (B, L)
         new_cache = {"k": ck, "v": cv, "pos": pos + s}
-        idx = jnp.arange(t, dtype=jnp.int32)
-        # Absolute position held by each ring slot after the write: the
-        # largest p ≤ pos with p ≡ idx (mod L); negative ⇒ never written.
-        k_pos = pos - jnp.mod(pos - idx, t)
-        k_valid = k_pos >= 0
-        mask = _mask(positions, k_pos[None], causal=causal, window=window,
-                     prefix_len=prefix_len, k_valid=k_valid[None])
+        mask = _mask(positions, k_pos, causal=causal, window=window,
+                     prefix_len=prefix_len, k_valid=k_valid)
         out = _attend(q, ck, cv, mask, cfg)
         out = out.reshape(b, s, n_kv * qpk * hd)
         return proj(p["o"], out, flgw, plan=plan_of(plans, "o")), new_cache

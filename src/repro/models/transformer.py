@@ -335,7 +335,7 @@ def _cache_len(slot: SlotSpec, max_seq: int) -> int:
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
-               dtype=None, *, params=None) -> dict:
+               dtype=None, *, params=None, per_slot: bool = False) -> dict:
     """Decode caches, stacked (n_blocks, ...) per slot.
 
     ``params``: pass the model params to cache a :class:`~repro.core.
@@ -345,6 +345,13 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
     ``lm_apply``, and they ride the returned cache unchanged. Without
     params (or off the grouped path) ``cache["plans"]`` is ``()`` and
     grouped projections fall back to per-call re-encoding.
+
+    ``per_slot``: allocate ``cache["pos"]`` as a (batch,) vector instead
+    of a scalar — each batch row becomes an independent request *slot* at
+    its own stream offset. This is the continuous-batching layout
+    (``repro.serving``): requests join and leave the decode batch
+    mid-flight, and :func:`reset_slots` recycles a freed row for a fresh
+    request. The lockstep scalar layout stays the default.
     """
     dtype = dtype or cfg.dtype
     nb = cfg.n_blocks
@@ -363,7 +370,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
                                    jnp.float32),
                 "conv": jnp.zeros((nb, batch, cfg.conv_width - 1, conv_ch),
                                   dtype)}
-    cache = {"pos": jnp.zeros((), jnp.int32), "blocks": blocks}
+    pos_shape = (batch,) if per_slot else ()
+    cache = {"pos": jnp.zeros(pos_shape, jnp.int32), "blocks": blocks}
     plans = ()
     if params is not None:
         state = encode_plans(params, cfg)
@@ -398,6 +406,38 @@ def refresh_cache_plans(params, cfg: ModelConfig, cache: dict) -> dict:
     return dict(cache, plans=fresh)
 
 
+def reset_slots(cache: dict, mask) -> dict:
+    """Recycle batch rows of a per-slot decode cache for fresh requests.
+
+    ``mask``: (batch,) bool — True rows are cleared: their stream offset
+    returns to 0 and their SSM recurrent/conv state zeroes (it integrates
+    every step, so the previous occupant would leak into the newcomer).
+    KV buffers need no clearing — resetting ``pos`` invalidates every ring
+    index (each maps to a negative absolute position until rewritten), and
+    masked logits contribute exactly 0 after the softmax. False rows pass
+    through bitwise-untouched (the slot-isolation contract, pinned in
+    tests/test_scheduler.py). Requires a ``per_slot=True`` cache;
+    jit-friendly.
+    """
+    pos = cache["pos"]
+    if jnp.ndim(pos) != 1:
+        raise ValueError(
+            "reset_slots needs a per-slot cache (init_cache(per_slot=True)); "
+            "this cache has a scalar shared position")
+    mask = jnp.asarray(mask, bool)
+    out = dict(cache, pos=jnp.where(mask, 0, pos))
+    blocks = {}
+    for name, c in cache["blocks"].items():
+        nc = dict(c)
+        for leaf in ("state", "conv"):
+            if leaf in c:
+                m = mask.reshape((1, -1) + (1,) * (c[leaf].ndim - 2))
+                nc[leaf] = jnp.where(m, jnp.zeros((), c[leaf].dtype), c[leaf])
+        blocks[name] = nc
+    out["blocks"] = blocks
+    return out
+
+
 def plan_specs(cfg: ModelConfig):
     """Logical spec tree of the stack's cached PlanState (replicated: the
     compact metadata is small int/bool tensors consumed whole by every
@@ -411,7 +451,7 @@ def plan_specs(cfg: ModelConfig):
     return jax.tree.map(lambda a: (None,) * a.ndim, aplans)
 
 
-def cache_specs(cfg: ModelConfig) -> dict:
+def cache_specs(cfg: ModelConfig, *, per_slot: bool = False) -> dict:
     """Logical-axis spec tree mirroring ``init_cache``.
 
     KV is sharded over the *sequence* dim on the model axis ("seq_kv") —
@@ -429,7 +469,8 @@ def cache_specs(cfg: ModelConfig) -> dict:
             blocks[f"slot{i}"] = {
                 "state": ("layers", "batch", "heads", None, None),
                 "conv": ("layers", "batch", None, "ffn")}
-    specs = {"pos": (), "blocks": blocks, "plans": plan_specs(cfg)}
+    specs = {"pos": ("batch",) if per_slot else (), "blocks": blocks,
+             "plans": plan_specs(cfg)}
     if cfg.encoder_layers:
         specs["encoder_out"] = ("batch", None, None)
     return specs

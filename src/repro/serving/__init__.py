@@ -1,0 +1,34 @@
+"""Plan-aware serving tier: one session API, continuous batching on top.
+
+Surface:
+
+* :class:`~repro.serving.session.ServeSession` — the unified serving
+  object (params version + jitted steps + caches + the ``plan_policy``
+  knob: ``"certify" | "trust" | "off"``).
+* :class:`~repro.serving.scheduler.Engine` — continuous-batching request
+  scheduler (slot admission, prefill/decode interleaving); its
+  ``admission="lockstep"`` mode is the static-batching baseline.
+* ``repro.serving.plan_cache`` — process-wide PlanState cache keyed by
+  the grouping-layout signature: one encode per params version, shared
+  by every concurrent request and session.
+* :func:`~repro.serving.stream.synthetic_requests` — open-loop Geometric
+  load generator (the Traffic Junction ``arrival_stream`` idiom).
+* ``repro.serving.steps`` — the jittable decode/prefill factories the
+  session builds on (``repro.train.step.make_serve_step`` /
+  ``make_prefill_step`` remain as deprecated shims over these).
+"""
+from repro.serving import plan_cache  # noqa: F401
+from repro.serving.scheduler import (  # noqa: F401
+    ADMISSION_MODES,
+    Engine,
+    Request,
+    RequestRecord,
+    ServeReport,
+)
+from repro.serving.session import ServeSession  # noqa: F401
+from repro.serving.steps import (  # noqa: F401
+    PLAN_POLICIES,
+    make_decode_step,
+    make_prefill_step,
+)
+from repro.serving.stream import max_seq_for, synthetic_requests  # noqa: F401

@@ -1,0 +1,104 @@
+"""Process-wide PlanState cache keyed by the grouping-layout signature.
+
+The paper's OSEL argument is that sparse metadata is cheap to produce
+*once* and amortize across many consumers. PR 4/5 proved that per request
+batch (the PlanState beside one KV cache); this module is the serving
+analogue at process scope: every :class:`~repro.serving.session.
+ServeSession`, and every request a scheduler admits, resolves its plans
+here — so N concurrent requests (or sessions) against the same params
+version share ONE certified encode instead of paying
+``refresh_cache_plans`` each (the trace-count guarantee pinned in
+tests/test_serving.py).
+
+The key is ``(structure fingerprint, capacity slack, uint32 layout
+signature)``: the signature (:func:`repro.core.encoder.plan_signature`)
+changes whenever a fresh encode would differ bitwise, and the structure
+fingerprint (layer paths + grouping-matrix shapes) disambiguates distinct
+models that happen to collide on the 32-bit hash. Lookups cost one
+signature pass (~half an encode); only misses encode. A small LRU bound
+keeps online-tuning churn (a new params version per publish) from growing
+the cache without limit.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Callable, Optional
+
+import jax
+
+from repro.core import encoder as planenc
+from repro.core.grouped import iter_flgw_layers
+
+# Request boundaries pay one signature pass each; eagerly that is a long
+# chain of tiny dispatches (~30x one decode step on CPU), jitted it is
+# one fused program — the difference between admission overhead drowning
+# the continuous-batching win and not (benchmarks/fig14_serving.py).
+_jit_signature = jax.jit(planenc.plan_signature)
+
+# A handful of live params versions is the realistic ceiling (serving
+# typically runs one, online tuning a rolling window of two or three).
+MAX_ENTRIES = 8
+
+_LOCK = threading.Lock()
+_CACHE: OrderedDict[tuple, planenc.PlanState] = OrderedDict()
+_STATS = {"hits": 0, "misses": 0, "encodes": 0}
+
+
+def structure_key(params: dict) -> tuple:
+    """Host-side fingerprint of a param tree's FLGW structure: the layer
+    paths and grouping-matrix shapes — metadata only, no device work."""
+    return tuple((path, tuple(p["ig"].shape), tuple(p["og"].shape))
+                 for path, p in iter_flgw_layers(params))
+
+
+def shared_plans(params: dict, *, encode: Callable[[], planenc.PlanState],
+                 slack: float = 1.0,
+                 sig: Optional[int] = None) -> planenc.PlanState:
+    """Resolve the PlanState of ``params`` through the process-wide cache.
+
+    ``encode`` builds the PlanState on a miss (the stack's own entry
+    point — e.g. ``lambda: transformer.encode_plans(params, cfg)``); its
+    result must carry the signature of ``params``. ``sig`` short-circuits
+    the signature pass when the caller already computed it.
+
+    Returns the one PlanState every concurrent consumer of this params
+    version shares. Thread-safe; the encode itself runs outside the lock
+    (two racing first-lookups may both encode — the second write wins,
+    correctness is unaffected since both are bitwise-identical).
+    """
+    if sig is None:
+        sig = int(_jit_signature(params))
+    key = (structure_key(params), float(slack), int(sig))
+    with _LOCK:
+        state = _CACHE.get(key)
+        if state is not None:
+            _CACHE.move_to_end(key)
+            _STATS["hits"] += 1
+            return state
+        _STATS["misses"] += 1
+    state = encode()
+    if not isinstance(state, planenc.PlanState):
+        raise TypeError(
+            f"encode() must return a PlanState, got {type(state).__name__}")
+    with _LOCK:
+        _STATS["encodes"] += 1
+        _CACHE[key] = state
+        _CACHE.move_to_end(key)
+        while len(_CACHE) > MAX_ENTRIES:
+            _CACHE.popitem(last=False)
+    return state
+
+
+def stats() -> dict:
+    with _LOCK:
+        return dict(_STATS, entries=len(_CACHE))
+
+
+def clear() -> None:
+    """Drop every cached PlanState and zero the counters (tests; or after
+    a params schema change that invalidates structure fingerprints)."""
+    with _LOCK:
+        _CACHE.clear()
+        for k in _STATS:
+            _STATS[k] = 0

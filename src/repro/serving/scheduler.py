@@ -1,0 +1,284 @@
+"""Continuous-batching request scheduler over a per-slot decode cache.
+
+The lockstep loop (``examples/serve.py`` pre-PR-6) runs a fixed batch of
+requests from shared prefill to shared completion: every slot waits for
+the slowest member, and arrivals wait for the whole batch to drain. This
+scheduler is the real thing — iteration-level scheduling in the Orca /
+continuous-batching sense, adapted to the repo's single jitted step:
+
+* **slot-based admission** — the decode batch is ``capacity`` slots; a
+  request occupies one slot from admission to completion and a freed slot
+  is recycled (``transformer.reset_slots``) for the next queued request
+  *mid-flight*, while the other slots keep decoding;
+* **prefill/decode interleaving at token granularity** — every engine
+  step feeds each active slot one token: the next prompt token while the
+  slot is prefilling, its previously-generated token once decoding. One
+  compiled program serves both phases, so a fresh prefill rides the same
+  step that advances its neighbours' decodes;
+* **plan-aware admission** — admission is a request boundary: under
+  ``plan_policy="certify"`` the session re-certifies the cache's
+  PlanState there (through the process-wide plan cache, so N concurrent
+  requests against one params version share ONE encode).
+
+``admission="lockstep"`` restricts admission to an all-slots-free engine
+— the static-batching baseline, running the *same* jitted step at the
+same capacity, so a throughput comparison isolates exactly the
+scheduling discipline (benchmarks/fig14_serving.py).
+
+The engine clock is the **tick**: one compute step = one tick, and the
+clock fast-forwards over genuinely idle stretches (nothing active, next
+arrival in the future) without burning compute. Request arrivals are
+open-loop tick offsets (``repro.serving.stream`` draws them Geometric,
+the ``traffic_junction.arrival_stream`` idiom) — arrival never waits on
+service, so queueing delay shows up in the latency numbers instead of
+back-pressuring the generator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+
+ADMISSION_MODES = ("continuous", "lockstep")
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request: prompt in, ``max_new_tokens`` greedy out."""
+    rid: int
+    prompt: np.ndarray            # (P,) int32 token ids, P >= 1
+    max_new_tokens: int
+    arrival: int = 0              # tick at which the request becomes visible
+
+    def __post_init__(self):
+        if len(self.prompt) < 1:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens < 1")
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Per-request lifecycle + output, as the engine observed it."""
+    rid: int
+    arrival: int                       # tick the request became visible
+    prompt_len: int = 0
+    admitted: int = -1                 # tick it entered a slot
+    first_token: int = -1              # tick its first generated token landed
+    completed: int = -1                # tick its last token landed
+    slot: int = -1
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    arrival_wall: float = float("nan")
+    completed_wall: float = float("nan")
+
+    @property
+    def latency_ticks(self) -> int:
+        return self.completed - self.arrival
+
+    @property
+    def latency_s(self) -> float:
+        return self.completed_wall - self.arrival_wall
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Aggregate of one engine run (``Engine.run``)."""
+    admission: str
+    capacity: int
+    steps: int                         # compute steps executed
+    wall_s: float
+    generated_tokens: int
+    records: List[RequestRecord]
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.generated_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def slot_utilization(self) -> float:
+        """Fraction of slot-steps that fed a live request (prefill or
+        decode) — the number continuous batching exists to raise. A
+        request occupies its slot for ``prompt_len + generated - 1``
+        steps (the last prompt token's step already yields the first
+        generated token)."""
+        if self.steps == 0:
+            return 0.0
+        busy = sum(r.prompt_len + len(r.tokens) - 1
+                   for r in self.records if r.completed >= 0)
+        return busy / (self.steps * self.capacity)
+
+    def latency_percentiles(self, qs=(50, 99)) -> dict:
+        lats = [r.latency_s for r in self.records if r.completed >= 0]
+        ticks = [r.latency_ticks for r in self.records if r.completed >= 0]
+        out = {}
+        for q in qs:
+            out[f"p{q}_s"] = float(np.percentile(lats, q)) if lats else None
+            out[f"p{q}_ticks"] = (float(np.percentile(ticks, q))
+                                  if ticks else None)
+        return out
+
+    def summary(self) -> dict:
+        lat = self.latency_percentiles()
+        return {"admission": self.admission, "capacity": self.capacity,
+                "requests": len(self.records), "steps": self.steps,
+                "wall_s": self.wall_s,
+                "generated_tokens": self.generated_tokens,
+                "tokens_per_s": self.tokens_per_s,
+                "slot_utilization": self.slot_utilization, **lat}
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side state of one occupied batch row."""
+    req: Request
+    record: RequestRecord
+    fed: int = 0                  # tokens fed so far (prompt first)
+    last_out: int = 0             # newest generated token (decode input)
+
+    @property
+    def done_prefill(self) -> bool:
+        return self.fed >= len(self.req.prompt)
+
+    def next_input(self) -> int:
+        return (int(self.req.prompt[self.fed]) if not self.done_prefill
+                else self.last_out)
+
+
+class Engine:
+    """Slot-based serving engine over one :class:`~repro.serving.session.
+    ServeSession`.
+
+    ``capacity`` is the decode-batch width (number of slots); ``max_seq``
+    bounds one request's prompt+generation (the per-slot ring length).
+    ``admission`` picks the scheduling discipline (see module docstring).
+    """
+
+    def __init__(self, session, capacity: int, max_seq: int, *,
+                 admission: str = "continuous"):
+        if admission not in ADMISSION_MODES:
+            raise ValueError(
+                f"admission must be one of {ADMISSION_MODES}, "
+                f"got {admission!r}")
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.session = session
+        self.capacity = capacity
+        self.max_seq = max_seq
+        self.admission = admission
+        self._reset = jax.jit(transformer.reset_slots)
+
+    # -- one run -----------------------------------------------------------
+
+    def run(self, requests: Sequence[Request]) -> ServeReport:
+        """Serve ``requests`` to completion; returns the run's report.
+
+        The request list is an open-loop schedule: each request becomes
+        visible at its ``arrival`` tick regardless of engine progress.
+        Deterministic given the session's params and the request list.
+        """
+        for r in requests:
+            need = len(r.prompt) + r.max_new_tokens
+            if need > self.max_seq:
+                raise ValueError(
+                    f"request {r.rid} needs {need} cache positions, "
+                    f"engine max_seq is {self.max_seq}")
+        b = self.capacity
+        pending = deque(sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        records = {r.rid: RequestRecord(rid=r.rid, arrival=r.arrival,
+                                        prompt_len=len(r.prompt))
+                   for r in requests}
+        order = [r.rid for r in requests]
+        unstamped = deque(sorted(records.values(), key=lambda c: c.arrival))
+
+        cache = self.session.new_cache(b, self.max_seq, per_slot=True)
+        slots: List[Optional[_Slot]] = [None] * b
+        pos = np.zeros(b, np.int64)    # host mirror of cache["pos"]
+        tick = 0
+        steps = 0
+        generated = 0
+        wall0 = time.perf_counter()
+
+        def now() -> float:
+            return time.perf_counter() - wall0
+
+        def stamp_arrivals():
+            t = now()
+            while unstamped and unstamped[0].arrival <= tick:
+                unstamped.popleft().arrival_wall = t
+
+        stamp_arrivals()
+        while pending or any(slots):
+            # -- clock: fast-forward genuinely idle stretches -------------
+            if not any(slots) and pending and pending[0].arrival > tick:
+                tick = pending[0].arrival
+                stamp_arrivals()
+
+            # -- admission ------------------------------------------------
+            can_admit = (self.admission == "continuous"
+                         or not any(slots))
+            admitted = []
+            if can_admit:
+                for i in range(b):
+                    if slots[i] is not None:
+                        continue
+                    if not pending or pending[0].arrival > tick:
+                        break
+                    req = pending.popleft()
+                    rec = records[req.rid]
+                    rec.admitted = tick
+                    rec.slot = i
+                    slots[i] = _Slot(req=req, record=rec)
+                    admitted.append(i)
+            if admitted:
+                # request boundary: certify the cache's PlanState (policy-
+                # dependent; under "certify" this resolves through the
+                # process-wide plan cache — shared encode, not per-request)
+                cache = self.session.refresh(cache)
+                mask = np.zeros(b, bool)
+                mask[admitted] = True
+                cache = self._reset(cache, mask)
+                pos[admitted] = 0
+
+            # -- one unified prefill/decode step --------------------------
+            tok = np.zeros(b, np.int32)
+            for i, s in enumerate(slots):
+                if s is not None:
+                    tok[i] = s.next_input()
+            next_tok, cache = self.session.decode(
+                cache, jnp.asarray(tok[:, None]),
+                jnp.asarray(pos[:, None].astype(np.int32)))
+            out = np.asarray(next_tok)[:, 0]
+            steps += 1
+            tick += 1
+            pos += 1           # the step advanced every row's device offset
+            stamp_arrivals()
+
+            # -- bookkeeping / retirement ---------------------------------
+            for i, s in enumerate(slots):
+                if s is None:
+                    continue
+                s.fed += 1
+                if s.done_prefill:
+                    token = int(out[i])
+                    s.last_out = token
+                    s.record.tokens.append(token)
+                    generated += 1
+                    if s.record.first_token < 0:
+                        s.record.first_token = tick
+                    if len(s.record.tokens) >= s.req.max_new_tokens:
+                        s.record.completed = tick
+                        s.record.completed_wall = now()
+                        slots[i] = None
+
+        wall = time.perf_counter() - wall0
+        return ServeReport(admission=self.admission, capacity=b,
+                           steps=steps, wall_s=wall,
+                           generated_tokens=generated,
+                           records=[records[rid] for rid in order])

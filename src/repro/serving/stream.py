@@ -1,0 +1,55 @@
+"""Open-loop synthetic request streams for the serving tier.
+
+The arrival process reuses the MARL Traffic Junction idiom directly:
+``traffic_junction.arrival_stream`` draws strictly-increasing entry
+ticks with Geometric(p) gaps — a discrete open-loop Poisson analogue.
+A higher ``p_arrive`` packs more requests into the same window (the
+heavy-traffic regime the continuous-batching scheduler exists for);
+prompt and generation lengths draw uniformly from caller ranges so the
+workload has the ragged completion times static batching handles worst.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.marl.envs.traffic_junction import arrival_stream
+from repro.serving.scheduler import Request
+
+# Effectively "no feasibility squeeze": serving arrivals have no
+# clear-the-junction deadline, so the stream's cap never binds.
+_NO_CAP = 1 << 30
+
+
+def synthetic_requests(seed: int, n: int, *, vocab: int,
+                       p_arrive: float = 0.5,
+                       prompt_len: Tuple[int, int] = (4, 12),
+                       gen_len: Tuple[int, int] = (2, 16)) -> List[Request]:
+    """Draw ``n`` open-loop requests: Geometric(p_arrive) arrival gaps,
+    uniform prompt/generation lengths (inclusive ranges), uniform random
+    prompt token ids over ``vocab``. Deterministic in ``seed``."""
+    if n < 1:
+        return []
+    key = jax.random.PRNGKey(seed)
+    ka, kp, kg, kt = jax.random.split(key, 4)
+    arrivals = np.asarray(arrival_stream(ka, n, p_arrive, _NO_CAP))
+    plens = np.asarray(jax.random.randint(
+        kp, (n,), prompt_len[0], prompt_len[1] + 1))
+    glens = np.asarray(jax.random.randint(
+        kg, (n,), gen_len[0], gen_len[1] + 1))
+    out = []
+    for i in range(n):
+        toks = jax.random.randint(jax.random.fold_in(kt, i),
+                                  (int(plens[i]),), 0, vocab, jnp.int32)
+        out.append(Request(rid=i, prompt=np.asarray(toks),
+                           max_new_tokens=int(glens[i]),
+                           arrival=int(arrivals[i])))
+    return out
+
+
+def max_seq_for(requests: List[Request]) -> int:
+    """Smallest per-slot ring length that fits every request."""
+    return max(len(r.prompt) + r.max_new_tokens for r in requests)

@@ -1,13 +1,13 @@
-"""train_step / serve_step factories — the functions the launcher jits.
+"""train_step factory — the function the launcher jits.
 
 ``make_train_step(cfg)`` returns a pure ``(state, batch) -> (state, metrics)``
 step: forward (remat-scanned blocks, chunked CE), backward, optional
 microbatch gradient accumulation (scan), global-norm clip, optimizer update.
-``make_serve_step(cfg)`` returns a single-token decode step against the KV /
-SSM caches; ``make_prefill_step(cfg)`` the full-sequence forward used by the
-prefill shape cells. Both are plan-aware on the FLGW grouped path: the
-serving PlanState lives *beside* the KV cache (``transformer.init_cache(...,
-params=...)``), encoded once and consumed by every decode step.
+
+The serving factories that used to live here (``make_serve_step`` /
+``make_prefill_step``) moved to ``repro.serving.steps`` behind the unified
+:class:`repro.serving.ServeSession` API; the names below survive as thin
+deprecated shims so existing callers keep resolving.
 
 Everything is shape-static: the dry-run lowers these exact functions against
 ShapeDtypeStructs, and the real launcher jits them with the same shardings.
@@ -15,6 +15,7 @@ ShapeDtypeStructs, and the real launcher jits them with the same shardings.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -133,35 +134,22 @@ def make_train_step(cfg: ModelConfig, *, optimizer: str = "adamw",
 def make_serve_step(cfg: ModelConfig, *, banded: bool = False,
                     unroll_blocks: bool = False,
                     refresh_plans: bool = False):
-    """Returns ``serve_step(params, cache, tokens, positions)`` —
-    one-token greedy decode against the cache (the decode shape cells).
+    """Deprecated shim — the serving tier moved to ``repro.serving``.
 
-    On the FLGW grouped path the cache carries the serving PlanState
-    (``init_cache(..., params=...)``): ``lm_apply`` consumes
-    ``cache["plans"]`` for every FLGW projection — mixers included — and
-    threads it through to the returned cache, so the grouped Pallas
-    kernel runs inside the decode loop against amortized metadata with
-    zero ``make_plan`` work per step while params are frozen.
-
-    Params that move *between* requests (online tuning) make those cached
-    plans stale; the request boundary should pass the cache through
-    ``transformer.refresh_cache_plans`` (one signature check per request).
-    ``refresh_plans=True`` builds that check into every decode step
-    instead — for servers that interleave tuning and decoding with no
-    request boundary to hook (costs ~half an encode per step, so keep it
-    off on the pure-decode hot path).
+    Use :class:`repro.serving.ServeSession` (or, for callers managing
+    their own jit boundary, ``repro.serving.make_decode_step``). The old
+    ``refresh_plans=True`` kwarg maps to ``certify_each_step=True``;
+    request-boundary certification is the session's ``plan_policy=
+    "certify"``. Behavior is unchanged — this delegates.
     """
-
-    def serve_step(params, cache, tokens, positions):
-        if refresh_plans:
-            cache = transformer.refresh_cache_plans(params, cfg, cache)
-        logits, _, cache = transformer.lm_apply(
-            params, cfg, tokens, positions, cache=cache, banded=banded,
-            remat=False, unroll_blocks=unroll_blocks)
-        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        return next_tok, cache
-
-    return serve_step
+    warnings.warn(
+        "repro.train.step.make_serve_step is deprecated; use "
+        "repro.serving.ServeSession (plan_policy='certify'|'trust'|'off') "
+        "or repro.serving.make_decode_step instead.",
+        DeprecationWarning, stacklevel=2)
+    from repro.serving.steps import make_decode_step
+    return make_decode_step(cfg, banded=banded, unroll_blocks=unroll_blocks,
+                            certify_each_step=refresh_plans)
 
 
 def make_prefill_step(cfg: ModelConfig, *, banded: bool = False,
@@ -169,38 +157,19 @@ def make_prefill_step(cfg: ModelConfig, *, banded: bool = False,
                       ssd_unroll: bool = False,
                       unroll_blocks: bool = False,
                       attn_identity: bool = False):
-    """Returns ``prefill(params, batch, plans=None) -> last logits`` —
-    the full-sequence forward of the prefill shape cells.
+    """Deprecated shim — the serving tier moved to ``repro.serving``.
 
-    On the FLGW grouped path the prefill encodes the PlanState *once*
-    (or reuses a caller-supplied one — e.g. the plans already cached
-    beside the KV cache) and every projection of the whole forward
-    consumes it; without the cached state each grouped projection would
-    re-encode its own plan per call. A caller-supplied PlanState is
-    *certified*, not trusted: prefill is the request boundary, and params
-    may have moved since the plans were cached (online tuning), so a
-    signature check re-encodes iff the grouping layout changed.
+    Use :class:`repro.serving.ServeSession` or ``repro.serving.
+    make_prefill_step``. The old certify-caller-plans behavior is the new
+    default ``plan_policy="certify"``. Behavior is unchanged — this
+    delegates.
     """
-    def prefill_step(params, batch, plans=None):
-        s = batch["tokens"].shape[1]
-        qc = q_chunk or pick_q_chunk(s)
-        if plans is None:
-            # empty PlanState (a no-op) off the grouped path
-            plans = transformer.encode_plans(params, cfg)
-        elif isinstance(plans, planenc.PlanState) and plans.plans:
-            plans = planenc.refresh_if_stale(
-                params, plans,
-                encode=lambda: transformer.encode_plans(params, cfg))
-        hidden, _, _ = transformer.lm_apply(
-            params, cfg, batch["tokens"], batch["positions"],
-            patch_embeds=batch.get("patch_embeds"),
-            frames=batch.get("frames"),
-            q_chunk=qc, banded=banded, remat=False, return_hidden=True,
-            ssd_unroll=ssd_unroll, unroll_blocks=unroll_blocks,
-            moe_dropless=True, attn_identity=attn_identity, plans=plans)
-        # Only the last position's logits are needed to start decoding.
-        from repro.models.layers import softcap, unembed
-        logits = unembed(params["embed"], hidden[:, -1:])
-        return softcap(logits.astype(jnp.float32), cfg.logit_softcap)
-
-    return prefill_step
+    warnings.warn(
+        "repro.train.step.make_prefill_step is deprecated; use "
+        "repro.serving.ServeSession (plan_policy='certify'|'trust'|'off') "
+        "or repro.serving.make_prefill_step instead.",
+        DeprecationWarning, stacklevel=2)
+    from repro.serving.steps import make_prefill_step as _mk
+    return _mk(cfg, plan_policy="certify", banded=banded, q_chunk=q_chunk,
+               ssd_unroll=ssd_unroll, unroll_blocks=unroll_blocks,
+               attn_identity=attn_identity)

@@ -147,7 +147,7 @@ def test_resolve_impl_policy():
         assert pe_ops.resolve_impl(64) == "reference"
         # explicit choice beats the ambient switch
         assert pe_ops.resolve_impl(64, "pallas") == "pallas"
-    pe_ops._size_fallback_warned = True       # silence for this check
+    pe_ops.reset_size_fallback_warning(True)  # silence for this check
     assert pe_ops.resolve_impl(big) == "reference"
     with pytest.raises(ValueError, match="impl must be"):
         pe_ops.resolve_impl(64, "mystery")
@@ -174,16 +174,15 @@ def test_implicit_size_fallback_warns_once_and_matches_reference():
     import warnings as w
     big = pe_ops._MAX_ITEMS + 8
     scores = jax.random.normal(jax.random.PRNGKey(3), (big, 4))
-    pe_ops._size_fallback_warned = False
-    try:
-        with pytest.warns(RuntimeWarning, match="lexsort reference"):
-            got = pe_ops.balanced_assign(scores, axis=1)
-        ref = np.asarray(pe_ref.ref_balanced_assign(scores, 1.0))
-        np.testing.assert_array_equal(np.asarray(got), ref)
-        with w.catch_warnings(record=True) as caught:
-            w.simplefilter("always")
-            pe_ops.balanced_assign(scores * 2.0, axis=1)
-        assert not any(issubclass(c.category, RuntimeWarning)
-                       for c in caught), caught
-    finally:
-        pe_ops._size_fallback_warned = True
+    # re-arm the latch; the autouse conftest fixture restores it after
+    pe_ops.reset_size_fallback_warning()
+    with pytest.warns(RuntimeWarning, match="lexsort reference"):
+        got = pe_ops.balanced_assign(scores, axis=1)
+    assert pe_ops.size_fallback_warned()
+    ref = np.asarray(pe_ref.ref_balanced_assign(scores, 1.0))
+    np.testing.assert_array_equal(np.asarray(got), ref)
+    with w.catch_warnings(record=True) as caught:
+        w.simplefilter("always")
+        pe_ops.balanced_assign(scores * 2.0, axis=1)
+    assert not any(issubclass(c.category, RuntimeWarning)
+                   for c in caught), caught

@@ -1,0 +1,231 @@
+"""Continuous-batching engine invariants (``repro.serving.scheduler``).
+
+The load-bearing guarantees:
+
+* **slot isolation** — neighbours joining and retiring mid-flight leave
+  a request's generated tokens bitwise identical to running it alone
+  (the per-slot cache rows really are independent streams);
+* **lockstep parity** — the per-slot engine under ``admission=
+  "lockstep"`` reproduces the classic scalar-``pos`` serve loop token
+  for token (the baseline in fig14 is the old behavior, re-expressed);
+* **scheduling wins are structural** — on a ragged open-loop stream,
+  continuous admission needs strictly fewer compute steps than lockstep
+  at equal capacity (what the tokens/s gap in BENCH_serving.json rests
+  on);
+* **plan economy** — a whole multi-request run costs one
+  ``make_plan``-per-layer encode (admission certifies through the
+  process plan cache, it does not re-encode);
+* **slot recycling** — ``transformer.reset_slots`` rewinds exactly the
+  masked rows (pos to 0, SSM state/conv to 0) and leaves other rows
+  bitwise untouched; stale KV needs no scrub because a rewound ``pos``
+  masks the whole ring.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import encoder, grouped
+from repro.models import transformer
+from repro.serving import (Engine, Request, ServeSession, plan_cache,
+                           synthetic_requests)
+from repro.serving.stream import max_seq_for
+
+
+def _tiny_cfg(**kw):
+    from repro.models.config import ModelConfig
+    base = dict(name="sched_test", family="dense", n_layers=2, d_model=64,
+                n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128, vocab=256,
+                flgw_groups=4, flgw_path="grouped",
+                flgw_targets=("mlp", "attn"), dtype=jnp.float32, remat=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _prompt(seed, n, vocab=256):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed), (n,),
+                                         0, vocab, jnp.int32))
+
+
+@pytest.fixture(autouse=True)
+def _fresh_plan_cache():
+    plan_cache.clear()
+    yield
+    plan_cache.clear()
+
+
+@pytest.fixture(scope="module")
+def session():
+    cfg = _tiny_cfg()
+    params, _ = transformer.lm_init(jax.random.PRNGKey(0), cfg)
+    return ServeSession(cfg, params, plan_policy="certify")
+
+
+# -- slot isolation ----------------------------------------------------------
+
+def test_join_and_retire_leave_neighbours_bitwise_unchanged(session):
+    """Request A alone vs A with B retiring and C joining mid-flight:
+    A's token stream must not move by a single bit."""
+    a = Request(rid=0, prompt=_prompt(1, 6), max_new_tokens=8, arrival=0)
+    b = Request(rid=1, prompt=_prompt(2, 3), max_new_tokens=2, arrival=0)
+    c = Request(rid=2, prompt=_prompt(3, 4), max_new_tokens=3, arrival=6)
+
+    eng = Engine(session, capacity=2, max_seq=16, admission="continuous")
+    alone = eng.run([a]).records[0].tokens
+    crowded = eng.run([a, b, c])
+    rec = {r.rid: r for r in crowded.records}
+    # the scenario really exercised join/retire mid-flight:
+    assert rec[1].completed < rec[0].completed     # B retired under A
+    assert rec[2].admitted > rec[1].completed      # C recycled B's slot
+    assert rec[2].slot == rec[1].slot
+    assert rec[0].tokens == alone
+
+
+def test_per_slot_positions_isolate_ragged_prompts(session):
+    """Two requests at different stream offsets in one batch each match
+    their solo runs — the (B,)-pos cache is not sharing state."""
+    reqs = [Request(rid=0, prompt=_prompt(4, 9), max_new_tokens=4),
+            Request(rid=1, prompt=_prompt(5, 2), max_new_tokens=6)]
+    eng = Engine(session, capacity=2, max_seq=16, admission="continuous")
+    together = {r.rid: r.tokens for r in eng.run(reqs).records}
+    for r in reqs:
+        solo = eng.run([r]).records[0].tokens
+        assert together[r.rid] == solo
+
+
+# -- lockstep parity with the scalar-cache loop ------------------------------
+
+def test_lockstep_engine_matches_scalar_cache_loop(session):
+    """The engine's lockstep mode token-matches the classic serve loop
+    (scalar ``pos``, shared prefill-by-token, shared decode)."""
+    b, p_len, gen = 3, 5, 4
+    prompts = [_prompt(10 + i, p_len) for i in range(b)]
+    reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=gen)
+            for i in range(b)]
+    eng = Engine(session, capacity=b, max_seq=p_len + gen,
+                 admission="lockstep")
+    rep = eng.run(reqs)
+
+    # classic loop: one scalar-pos cache, every row in phase
+    cache = session.new_cache(b, p_len + gen)
+    toks = np.stack(prompts)
+    outs = [[] for _ in range(b)]
+    last = np.zeros(b, np.int32)
+    for t in range(p_len + gen - 1):
+        col = toks[:, t] if t < p_len else last
+        nxt, cache = session.decode(
+            cache, jnp.asarray(col[:, None]),
+            session.greedy_positions(b, t))
+        last = np.asarray(nxt)[:, 0]
+        if t >= p_len - 1:
+            for i in range(b):
+                outs[i].append(int(last[i]))
+    assert [r.tokens for r in rep.records] == outs
+    assert rep.steps == p_len + gen - 1
+
+
+# -- the structural scheduling win -------------------------------------------
+
+def test_continuous_needs_fewer_steps_than_lockstep(session):
+    reqs = synthetic_requests(7, 10, vocab=256, p_arrive=0.7,
+                              prompt_len=(2, 8), gen_len=(2, 10))
+    ms = max_seq_for(reqs)
+    cont = Engine(session, capacity=3, max_seq=ms,
+                  admission="continuous").run(reqs)
+    lock = Engine(session, capacity=3, max_seq=ms,
+                  admission="lockstep").run(reqs)
+    assert cont.steps < lock.steps
+    assert cont.slot_utilization > lock.slot_utilization
+    # same work either way
+    assert cont.generated_tokens == lock.generated_tokens
+    assert all(r.completed >= 0 for r in cont.records)
+    assert all(r.completed >= 0 for r in lock.records)
+
+
+def test_arrivals_gate_admission(session):
+    """A request is never admitted before its arrival tick, and an idle
+    engine fast-forwards to the next arrival instead of spinning."""
+    reqs = [Request(rid=0, prompt=_prompt(20, 3), max_new_tokens=2,
+                    arrival=0),
+            Request(rid=1, prompt=_prompt(21, 3), max_new_tokens=2,
+                    arrival=50)]
+    rep = Engine(session, capacity=2, max_seq=8,
+                 admission="continuous").run(reqs)
+    rec = {r.rid: r for r in rep.records}
+    assert rec[1].admitted == 50                  # fast-forwarded, not 8
+    assert rep.steps == 2 * (3 + 2 - 1)           # no idle burn
+
+
+# -- plan economy across a run ----------------------------------------------
+
+def test_whole_run_costs_one_encode(monkeypatch):
+    """Admission certifies via the process plan cache: a multi-request
+    run traces ``make_plan`` exactly once per FLGW layer, total."""
+    cfg = _tiny_cfg()
+    params, _ = transformer.lm_init(jax.random.PRNGKey(0), cfg)
+    n_layers = sum(1 for _ in encoder.iter_flgw_layers(params))
+    calls = {"n": 0}
+    real = grouped.make_plan
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(grouped, "make_plan", counting)
+    sess = ServeSession(cfg, params, plan_policy="certify")
+    reqs = synthetic_requests(3, 6, vocab=256, p_arrive=0.6,
+                              prompt_len=(2, 6), gen_len=(2, 6))
+    Engine(sess, capacity=2, max_seq=max_seq_for(reqs),
+           admission="continuous").run(reqs)
+    assert calls["n"] == n_layers
+    assert plan_cache.stats()["encodes"] == 1
+
+
+# -- slot recycling ----------------------------------------------------------
+
+def test_reset_slots_rewinds_only_masked_rows():
+    cfg = registry.get_smoke_config("jamba_1_5_large")   # attn + ssm blocks
+    cache = transformer.init_cache(cfg, 3, 8, per_slot=True)
+    # dirty every leaf so zeroing is observable
+    cache = jax.tree.map(lambda x: jnp.ones_like(x), cache)
+    cache["pos"] = jnp.array([5, 3, 7], jnp.int32)
+
+    out = transformer.reset_slots(cache, np.array([False, True, False]))
+    np.testing.assert_array_equal(np.asarray(out["pos"]), [5, 0, 7])
+    saw_state = False
+    for name, blk in out["blocks"].items():
+        for leaf in ("state", "conv"):
+            if leaf in blk:
+                saw_state = True
+                got = np.asarray(blk[leaf])
+                want = np.asarray(cache["blocks"][name][leaf])
+                assert (got[:, 1] == 0).all()              # recycled row
+                np.testing.assert_array_equal(got[:, [0, 2]],
+                                              want[:, [0, 2]])
+        # KV rings ride through untouched — a rewound pos masks them
+        for leaf in ("k", "v"):
+            if leaf in blk:
+                np.testing.assert_array_equal(np.asarray(blk[leaf]),
+                                              np.asarray(cache["blocks"]
+                                                         [name][leaf]))
+    assert saw_state
+
+
+def test_reset_slots_rejects_scalar_cache():
+    cfg = _tiny_cfg()
+    cache = transformer.init_cache(cfg, 2, 8)
+    with pytest.raises(ValueError, match="per-slot"):
+        transformer.reset_slots(cache, np.array([True, False]))
+
+
+def test_recycled_slot_replays_exactly(session):
+    """A prompt served in a freshly reset slot (previously occupied, at a
+    different offset) matches the same prompt in a fresh cache — pos
+    rewind + state zeroing is a complete recycle."""
+    r1 = Request(rid=0, prompt=_prompt(30, 7), max_new_tokens=5)
+    r2 = Request(rid=1, prompt=_prompt(31, 4), max_new_tokens=4)
+    eng = Engine(session, capacity=1, max_seq=12, admission="continuous")
+    rep = eng.run([r1, r2])          # r2 recycles r1's only slot
+    solo = eng.run([r2])
+    assert rep.records[1].tokens == solo.records[0].tokens

@@ -1,0 +1,215 @@
+"""ServeSession surface: plan policies, the process-wide plan cache, and
+the deprecated ``repro.train.step`` shims.
+
+The API-consolidation contract this file pins:
+
+* ``plan_policy`` is the one knob — ``certify`` re-resolves plans at
+  request boundaries (and picks up online-tuning updates), ``trust``
+  consumes the resolved PlanState unconditionally, ``off`` serves
+  planless (per-call re-encode in the projections).
+* N sessions / requests against one params version cost ONE
+  ``make_plan``-per-layer encode, process-wide (the plan cache).
+* ``make_serve_step`` / ``make_prefill_step`` still resolve from
+  ``repro.train.step`` but warn DeprecationWarning and behave bitwise
+  like the ``repro.serving`` factories they delegate to (the
+  ``marl/env.py`` shim pattern).
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import encoder, grouped
+from repro.models import transformer
+from repro.serving import (PLAN_POLICIES, ServeSession, make_decode_step,
+                           make_prefill_step, plan_cache)
+from repro.train import step as step_lib
+
+
+def _cfg(**kw):
+    base = dict(flgw_groups=4, flgw_path="grouped", flgw_targets=("mlp",))
+    base.update(kw)
+    return registry.get_smoke_config("gemma2_2b", **base)
+
+
+def _flip_grouping(params):
+    """Online-tuning stand-in: negating ig/og moves every layout."""
+    flipped = jax.tree.map(lambda x: x, params)
+    for _, p in encoder.iter_flgw_layers(flipped):
+        p["ig"] = -p["ig"]
+        p["og"] = -p["og"]
+    return flipped
+
+
+@pytest.fixture(autouse=True)
+def _fresh_plan_cache():
+    plan_cache.clear()
+    yield
+    plan_cache.clear()
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = _cfg()
+    params, _ = transformer.lm_init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# -- policy semantics --------------------------------------------------------
+
+def test_policy_validation():
+    cfg = _cfg()
+    params, _ = transformer.lm_init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="plan_policy"):
+        ServeSession(cfg, params, plan_policy="always")
+    assert set(PLAN_POLICIES) == {"certify", "trust", "off"}
+
+
+def test_certify_tracks_online_tuning(served):
+    """certify: after params move, a refresh hands back exactly what a
+    fresh encode of the new params would produce."""
+    cfg, params = served
+    sess = ServeSession(cfg, params, plan_policy="certify")
+    cache = sess.new_cache(1, 8)
+    assert isinstance(cache["plans"], encoder.PlanState)
+    old_sig = int(cache["plans"].sig)
+
+    sess.update_params(_flip_grouping(params))
+    cache = sess.refresh(cache)
+    fresh = transformer.encode_plans(sess.params, cfg)
+    assert int(cache["plans"].sig) == int(fresh.sig) != old_sig
+    for a, b in zip(jax.tree.leaves(cache["plans"]), jax.tree.leaves(fresh)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_trust_skips_boundary_work(served):
+    """trust: refresh is a no-op even when params moved underneath —
+    that is the policy's stated contract (caller owns update_params)."""
+    cfg, params = served
+    sess = ServeSession(cfg, params, plan_policy="trust")
+    cache = sess.new_cache(1, 8)
+    stale_sig = int(cache["plans"].sig)
+    sess.params = _flip_grouping(params)      # move WITHOUT update_params
+    cache = sess.refresh(cache)
+    assert int(cache["plans"].sig) == stale_sig
+
+
+def test_off_serves_planless(served):
+    cfg, params = served
+    sess = ServeSession(cfg, params, plan_policy="off")
+    assert sess.plans == ()
+    cache = sess.new_cache(1, 8)
+    assert cache["plans"] == ()
+
+
+def test_policies_decode_identically(served):
+    """The policies are about *when* metadata is produced, never about
+    the math: one decode step agrees bitwise across all three."""
+    cfg, params = served
+    tok = jnp.zeros((1, 1), jnp.int32)
+    pos = jnp.zeros((1, 1), jnp.int32)
+    outs = {}
+    for policy in PLAN_POLICIES:
+        sess = ServeSession(cfg, params, plan_policy=policy)
+        nxt, _ = sess.decode(sess.new_cache(1, 8), tok, pos)
+        outs[policy] = np.asarray(nxt)
+    np.testing.assert_array_equal(outs["certify"], outs["trust"])
+    np.testing.assert_array_equal(outs["certify"], outs["off"])
+
+
+# -- the process-wide plan cache ---------------------------------------------
+
+def test_shared_plans_one_encode_for_n_sessions(served, monkeypatch):
+    """Trace-count guard: N concurrent sessions over one params version
+    cost exactly one ``make_plan`` per FLGW layer, process-wide."""
+    cfg, params = served
+    n_layers = sum(1 for _ in encoder.iter_flgw_layers(params))
+    assert n_layers > 0
+    calls = {"n": 0}
+    real = grouped.make_plan
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(grouped, "make_plan", counting)
+    sessions = [ServeSession(cfg, params, plan_policy="certify")
+                for _ in range(4)]
+    assert calls["n"] == n_layers                 # ONE encode total
+    first = sessions[0].plans
+    for s in sessions[1:]:
+        assert s.plans is first                   # literally shared
+    st = plan_cache.stats()
+    assert st["encodes"] == 1 and st["hits"] == 3
+
+
+def test_new_params_version_encodes_once_more(served):
+    cfg, params = served
+    sess = ServeSession(cfg, params)
+    sess.update_params(_flip_grouping(params))
+    sess.update_params(params)                    # back to a cached version
+    st = plan_cache.stats()
+    assert st["encodes"] == 2                     # v1 + flipped, no third
+    assert st["entries"] == 2
+
+
+def test_share_plans_off_bypasses_cache(served):
+    cfg, params = served
+    ServeSession(cfg, params, share_plans=False)
+    st = plan_cache.stats()
+    assert st["hits"] == st["misses"] == st["encodes"] == 0
+
+
+def test_plan_cache_lru_bound(served):
+    cfg, params = served
+    sess = ServeSession(cfg, params)
+
+    def version(i):
+        p = jax.tree.map(lambda x: x, params)
+        for j, (_, lay) in enumerate(encoder.iter_flgw_layers(p)):
+            k = jax.random.PRNGKey(1000 * i + j)
+            lay["ig"] = jax.random.normal(k, lay["ig"].shape)
+            lay["og"] = jax.random.normal(jax.random.fold_in(k, 1),
+                                          lay["og"].shape)
+        return p
+
+    for i in range(plan_cache.MAX_ENTRIES + 2):
+        sess.update_params(version(i))
+    assert plan_cache.stats()["entries"] == plan_cache.MAX_ENTRIES
+
+
+# -- deprecated shims --------------------------------------------------------
+
+def test_train_step_shims_warn_and_delegate(served):
+    cfg, params = served
+    with pytest.warns(DeprecationWarning, match="repro.serving"):
+        old_serve = step_lib.make_serve_step(cfg)
+    with pytest.warns(DeprecationWarning, match="repro.serving"):
+        old_prefill = step_lib.make_prefill_step(cfg)
+
+    cache = transformer.init_cache(cfg, 1, 8, params=params)
+    tok = jnp.zeros((1, 1), jnp.int32)
+    pos = jnp.zeros((1, 1), jnp.int32)
+    got, _ = old_serve(params, cache, tok, pos)
+    want, _ = make_decode_step(cfg)(params, cache, tok, pos)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    batch = {"tokens": jnp.zeros((1, 8), jnp.int32),
+             "positions": jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32),
+                                           (1, 8))}
+    got = old_prefill(params, batch, cache["plans"])
+    want = make_prefill_step(cfg)(params, batch, cache["plans"])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_new_factories_do_not_warn(served):
+    cfg, _ = served
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        make_decode_step(cfg)
+        make_prefill_step(cfg)
+    assert not any(issubclass(c.category, DeprecationWarning)
+                   for c in caught), caught
