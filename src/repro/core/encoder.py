@@ -138,6 +138,33 @@ def encode_plans(params: dict, cfg) -> PlanState:
                      plan_signature(params))
 
 
+def attach_compact(state: PlanState, params: dict) -> PlanState:
+    """Attach compact weights (``GroupPlan.wc``) to every plan in a state.
+
+    The serving-side half of the OSEL handoff: gather once per params
+    version, consume through the fused kernel until the params move. The
+    signature is layout-only — it does *not* certify ``wc`` — so holders
+    of an attached state must re-attach at every params boundary (the
+    refresh hooks below do this automatically) and must never share the
+    attached state across params versions (e.g. through the process-wide
+    plan cache, which is keyed by layout signature alone).
+    """
+    if not isinstance(state, PlanState) or not state.plans:
+        return state
+    return state._replace(plans=grouped.attach_compact(state.plans, params))
+
+
+def _certify(state: PlanState, params: dict) -> PlanState:
+    """The pass-through branch of a refresh: layout certified by ``sig``,
+    but any attached ``wc`` snapshots weight *values*, which the
+    signature deliberately ignores — re-gather them from the params being
+    certified against so online param updates can never serve stale
+    weights through a layout-stable plan."""
+    if grouped.has_compact(state.plans):
+        return attach_compact(state, params)
+    return state
+
+
 def maybe_refresh(params: dict, state: PlanState, it, cfg,
                   schedule=None) -> PlanState:
     """Re-encode ``state`` from the current grouping matrices when due.
@@ -161,16 +188,18 @@ def maybe_refresh(params: dict, state: PlanState, it, cfg,
     if mode not in REFRESH_MODES:
         raise ValueError(f"unknown refresh mode {mode!r}")
     k = 1 if schedule is None else max(1, schedule.refresh_every)
+    attached = grouped.has_compact(state.plans)
+    fresh = (lambda: attach_compact(encode_plans(params, cfg), params)) \
+        if attached else (lambda: encode_plans(params, cfg))
     if mode == "period" and k == 1:
-        return encode_plans(params, cfg)
+        return fresh()
     due = jnp.asarray(it, jnp.int32) % k == 0
     if mode == "period":
         pred = due
     else:
         changed = plan_signature(params) != state.sig
         pred = changed if mode == "on_change" else changed | due
-    return jax.lax.cond(pred, lambda: encode_plans(params, cfg),
-                        lambda: state)
+    return jax.lax.cond(pred, fresh, lambda: _certify(state, params))
 
 
 def refresh_if_stale(params: dict, state: PlanState, cfg=None, *,
@@ -201,6 +230,13 @@ def refresh_if_stale(params: dict, state: PlanState, cfg=None, *,
         if cfg is None:
             raise ValueError("refresh_if_stale needs cfg (or encode=)")
         encode = lambda: encode_plans(params, cfg)   # noqa: E731
+    if grouped.has_compact(state.plans):
+        # Attached compact weights: make the encode branch structurally
+        # match, and re-gather wc even on the certified branch — sig is
+        # layout-only, it cannot vouch for weight values (online tuning
+        # may move W without moving the layout).
+        base = encode
+        encode = lambda: attach_compact(base(), params)   # noqa: E731
     sig = plan_signature(params)
     # Reuse the signature just computed instead of the one ``encode``
     # re-derives internally (identical by construction — same params):
@@ -208,7 +244,7 @@ def refresh_if_stale(params: dict, state: PlanState, cfg=None, *,
     # refresh costs one signature + one encode, not two signatures.
     return jax.lax.cond(sig != state.sig,
                         lambda: encode()._replace(sig=sig),
-                        lambda: state)
+                        lambda: _certify(state, params))
 
 
 # re-export: the single source of truth for walking FLGW structure

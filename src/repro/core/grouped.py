@@ -37,13 +37,25 @@ from repro.sharding.partition import constrain
 
 
 class GroupPlan(NamedTuple):
-    """Static-shape compact layout of one FLGW layer's mask."""
+    """Static-shape compact layout of one FLGW layer's mask.
+
+    ``wc`` is the optional weight half of the encode output — the dense W
+    compacted to ``(G, capM, capN)`` (:func:`attach_compact`), the paper's
+    OSEL→core handoff. Plans used for *training* leave it ``None`` (W
+    moves every step); serving attaches it once per params version so the
+    consume path stops re-gathering W per call. Because ``wc`` caches
+    *weight values* — unlike the int layout, which a plan signature
+    certifies — it must always be (re-)derived from the params actually
+    being served: it never rides the process-wide plan cache, and the
+    certify path re-attaches it even when the layout signature matches.
+    """
     row_ids: jax.Array    # (G, capM) int32 — rows assigned to each group
     col_ids: jax.Array    # (G, capN) int32
     row_valid: jax.Array  # (G, capM) bool — padding slots are False
     col_valid: jax.Array  # (G, capN) bool
     row_group: jax.Array  # (M,) int32 — balanced group of each row
     col_group: jax.Array  # (N,) int32
+    wc: Optional[jax.Array] = None  # (G, capM, capN) compact weights
 
 
 def balanced_assign(scores: jax.Array, axis: int,
@@ -115,9 +127,11 @@ def transpose_plan(plan: GroupPlan) -> GroupPlan:
     balanced_assign(og.T, axis=1)``), so the transposed layout is free:
     no re-encoding, matching the paper's transposed-encode reuse (§III-B).
     """
+    wc = None if plan.wc is None else jnp.swapaxes(plan.wc, -1, -2)
     return GroupPlan(row_ids=plan.col_ids, col_ids=plan.row_ids,
                      row_valid=plan.col_valid, col_valid=plan.row_valid,
-                     row_group=plan.col_group, col_group=plan.row_group)
+                     row_group=plan.col_group, col_group=plan.row_group,
+                     wc=wc)
 
 
 # ---------------------------------------------------------------------------
@@ -173,6 +187,59 @@ def encode_plans(params: dict, cfg) -> RawPlans:
     return plans
 
 
+def _map_plans(plans: RawPlans, params: dict, fn) -> RawPlans:
+    """Rebuild ``plans`` with ``fn(plan, layer_params)`` at every FLGW
+    projection, walking params and plans in lockstep."""
+    out: RawPlans = {}
+    for path, p in iter_flgw_layers(params):
+        node_in, node_out = plans, out
+        for name in path[:-1]:
+            node_in = node_in[name]
+            node_out = node_out.setdefault(name, {})
+        node_out[path[-1]] = fn(node_in[path[-1]], p)
+    return out
+
+
+def attach_compact(plans: RawPlans, params: dict) -> RawPlans:
+    """Attach the compact weights ``W_c`` to every plan — the weight half
+    of the paper's OSEL encode output (§III-B: the encoder emits the
+    sparse *data*, not just indices, and the cores consume it directly).
+
+    One XLA gather per projection, amortized over every consume until the
+    params move; :func:`grouped_apply` then takes the fused kernel path
+    (``flgw_matmul.grouped_matmul_fused``), which reads ``wc`` as-is and
+    gathers only the activations — in its prologue. ``wc`` snapshots
+    weight *values*: re-attach whenever params change (the plan signature
+    does **not** cover it — see :class:`GroupPlan`). Stacked/scanned and
+    vmapped-expert layers attach along their leading dims unchanged.
+    """
+    def _one(plan: GroupPlan, p: dict) -> GroupPlan:
+        wc = kops.compact_weights(p["w"], plan.row_ids, plan.col_ids,
+                                  plan.row_valid, plan.col_valid)
+        return plan._replace(wc=wc)
+    return _map_plans(plans, params, _one)
+
+
+def strip_compact(plans: RawPlans) -> RawPlans:
+    """Drop every plan's ``wc`` — back to the pure-layout (int/bool) tree
+    that training carries and the process-wide plan cache may hold."""
+    return jax.tree.map(
+        lambda p: p._replace(wc=None) if isinstance(p, GroupPlan) else p,
+        plans, is_leaf=lambda p: isinstance(p, GroupPlan))
+
+
+def has_compact(plans) -> bool:
+    """Whether any plan in the tree carries attached compact weights."""
+    found = False
+    def _look(p):
+        nonlocal found
+        if isinstance(p, GroupPlan) and p.wc is not None:
+            found = True
+        return p
+    jax.tree.map(_look, plans, is_leaf=lambda p: isinstance(p, GroupPlan))
+    return found
+
+
 # ---------------------------------------------------------------------------
 # Compact apply with custom VJP
 # ---------------------------------------------------------------------------
@@ -191,6 +258,22 @@ def _gather_w(w, plan: GroupPlan):
                      wc, 0)
 
 
+def _core_matmul(x, w, plan: GroupPlan, interpret, impl):
+    """One compact product. Plans carrying attached compact weights take
+    the fused OSEL→core path (in-kernel activation gather, zero per-call
+    W traffic); bare plans take the per-call XLA-gather path; the jnp
+    reference stays the GSPMD-shardable fallback. The three agree —
+    fused vs gather bitwise (same tiles, same accumulation order)."""
+    if plan.wc is not None and impl != "reference":
+        return kops.grouped_matmul_fused(x, plan.wc, plan.row_ids,
+                                         plan.row_valid, plan.col_ids,
+                                         plan.col_valid, n=w.shape[1],
+                                         interpret=interpret)
+    return kops.grouped_matmul(x, w, plan.row_ids, plan.col_ids,
+                               plan.row_valid, plan.col_valid,
+                               interpret=interpret, impl=impl)
+
+
 @partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
 def _grouped_core(x, w, ig, og, plan: GroupPlan, temperature: float,
                   interpret: bool, impl: str):
@@ -200,15 +283,11 @@ def _grouped_core(x, w, ig, og, plan: GroupPlan, temperature: float,
     reuses the very same metadata via the transpose trick, so one encode
     serves the whole step — the paper's OSEL amortization.
     """
-    return kops.grouped_matmul(x, w, plan.row_ids, plan.col_ids,
-                               plan.row_valid, plan.col_valid,
-                               interpret=interpret, impl=impl)
+    return _core_matmul(x, w, plan, interpret, impl)
 
 
 def _grouped_fwd(x, w, ig, og, plan, temperature, interpret, impl):
-    y = kops.grouped_matmul(x, w, plan.row_ids, plan.col_ids,
-                            plan.row_valid, plan.col_valid,
-                            interpret=interpret, impl=impl)
+    y = _core_matmul(x, w, plan, interpret, impl)
     return y, (x, w, ig, og, plan)
 
 
@@ -221,7 +300,8 @@ def _grouped_bwd(temperature, interpret, impl, res, gy):
     cap_n = plan.col_ids.shape[1]
 
     xg = constrain(_gather_x(x, plan), (None, "batch", None))
-    wc = constrain(_gather_w(w, plan), (None, None, "flgw_cap"))
+    wc = plan.wc if plan.wc is not None else _gather_w(w, plan)
+    wc = constrain(wc, (None, None, "flgw_cap"))
     gc = jnp.take(gy, plan.col_ids.reshape(-1), axis=1)  # (B, G*capN)
     gc = gc.reshape(b, g, cap_n).transpose(1, 0, 2)      # (G, B, capN)
     gc = jnp.where(plan.col_valid[:, None, :], gc, 0)
@@ -267,9 +347,13 @@ def _grouped_bwd(temperature, interpret, impl, res, gy):
     sel_c = jnp.sum(soft_og * pg_col, axis=0, keepdims=True)
     dog = (s_col[None, :] / tau) * sel_c * (pg_col - soft_og)
 
-    # Plan entries are int/bool metadata: their cotangent type is float0.
-    dplan = jax.tree.map(lambda a: np.zeros(a.shape, jax.dtypes.float0),
-                         plan)
+    # Plan entries are metadata: int/bool leaves get float0 cotangents; an
+    # attached ``wc`` (a float snapshot derived from w) gets symbolic
+    # zeros — the full weight gradient already flows through ``dw``.
+    dplan = jax.tree.map(
+        lambda a: (jnp.zeros(a.shape, a.dtype)
+                   if jnp.issubdtype(a.dtype, jnp.inexact)
+                   else np.zeros(a.shape, jax.dtypes.float0)), plan)
     return dx, dw, dig.astype(ig.dtype), dog.astype(og.dtype), dplan
 
 

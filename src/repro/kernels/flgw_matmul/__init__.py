@@ -1,2 +1,5 @@
-from repro.kernels.flgw_matmul.ops import grouped_matmul, reference  # noqa: F401
-from repro.kernels.flgw_matmul.flgw_matmul import grouped_bmm  # noqa: F401
+from repro.kernels.flgw_matmul.ops import (compact_weights,  # noqa: F401
+                                           grouped_matmul,
+                                           grouped_matmul_fused, reference)
+from repro.kernels.flgw_matmul.flgw_matmul import (fused_bmm,  # noqa: F401
+                                                   grouped_bmm)

@@ -4,18 +4,20 @@ Pipeline (the TPU analogue of the FPGA's load-allocation unit):
 
   1. argmax    scores -> (pref, strength)   per-item group preference (VPU)
   2. Pallas    comparator-rank counting sort + prefix-sum placement
+               (two tiled passes — see ``plan_encode.assign_slots``)
   3. scatter   slot_of_item -> (G, cap) buckets (inverse permutation, XLA)
 
 Leading batch dims are folded into the kernel grid (stacked decoder layers
 encode in one launch — no vmap-of-pallas needed). On non-TPU backends the
 kernel runs in interpret mode; ``impl="reference"`` (or the shared
-``repro.kernels.use_reference_impl`` switch, for GSPMD lowering) and
-oversized inputs fall back to the lexsort reference in ``ref.py``.
+``repro.kernels.use_reference_impl`` switch, for GSPMD lowering) falls back
+to the lexsort reference in ``ref.py``. There is no size cap: the placement
+passes tile over ``(bi, bj)`` item pairs, so the VMEM working set is
+independent of the item count.
 """
 from __future__ import annotations
 
 import functools
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -24,78 +26,32 @@ from repro.kernels import reference_impl_active
 from repro.kernels.plan_encode import ref as _ref
 from repro.kernels.plan_encode.plan_encode import assign_slots
 
-# Above this item count the (Mp, bj) comparator tiles outgrow VMEM; the
-# encode is off the hot path, so just use the XLA reference there.
-_MAX_ITEMS = 4096
-
-# The implicit size fallback warns once per process. Mutate it only
-# through the helpers below — direct writes from tests used to leak
-# between test files (the last writer decided whether any later oversize
-# encode in the same process could warn at all).
-_size_fallback_warned = False
-
-
-def size_fallback_warned() -> bool:
-    """Whether the once-per-process oversize-fallback warning has fired."""
-    return _size_fallback_warned
-
-
-def reset_size_fallback_warning(warned: bool = False) -> bool:
-    """Set the once-per-process warning latch; returns the previous value.
-
-    ``reset_size_fallback_warning()`` re-arms the warning (a test that
-    asserts on it fires regardless of what ran earlier in the process);
-    ``reset_size_fallback_warning(True)`` silences it for noise-sensitive
-    blocks. Pair with the returned previous value — or rely on the
-    autouse fixture in ``tests/conftest.py``, which snapshots and
-    restores the latch around every test.
-    """
-    global _size_fallback_warned
-    prev = _size_fallback_warned
-    _size_fallback_warned = bool(warned)
-    return prev
+# Default placement tile (items per comparator-tile side). 512 keeps the
+# (bi, bj) int32/f32 rank-pass tiles ~1 MiB each — far under VMEM at any
+# M. Override per call (``balanced_assign(block=...)``) to force the
+# multi-tile path on small inputs in tests.
+_DEFAULT_BLOCK = 512
 
 
 def resolve_impl(items: int, impl: str | None = None) -> str:
     """Which implementation an ``items``-row encode will run — the single
     impl-selection policy, exposed so tests can assert on it.
 
-    An **explicit** ``impl`` is binding: requesting ``"pallas"`` above the
-    ``_MAX_ITEMS`` tile cap raises instead of silently degrading (the old
-    behavior ignored the request — a caller pinning the kernel for a perf
-    run would measure the lexsort reference without knowing). **Implicit**
-    resolution (``impl=None``) prefers the kernel and falls back to the
-    bitwise-identical lexsort reference under the shared
-    ``repro.kernels.use_reference_impl`` switch (intentional, silent) or
-    above the size cap (one ``RuntimeWarning`` per process).
+    An **explicit** ``impl`` is binding. **Implicit** resolution
+    (``impl=None``) prefers the kernel and falls back to the
+    bitwise-identical lexsort reference only under the shared
+    ``repro.kernels.use_reference_impl`` switch (intentional, silent —
+    GSPMD cannot partition a Pallas custom call). Since the placement
+    pass was tiled there is no size-based fallback: any ``items`` count
+    runs the kernel, so ``items`` no longer affects the answer and is
+    kept for call-site compatibility only.
     """
-    global _size_fallback_warned
     if impl is not None:
         if impl not in ("pallas", "reference"):
             raise ValueError(
                 f"impl must be 'pallas' or 'reference', got {impl!r}")
-        if impl == "pallas" and items > _MAX_ITEMS:
-            raise ValueError(
-                f"plan_encode: impl='pallas' was requested explicitly, but "
-                f"{items} items exceed the kernel's tile cap "
-                f"_MAX_ITEMS={_MAX_ITEMS} — the (Mp, bj) comparator tile "
-                "would outgrow VMEM. Pass impl='reference' (bitwise-"
-                "identical lexsort) or drop impl= for the automatic "
-                "fallback; tiling the placement pass to lift the cap is a "
-                "ROADMAP item.")
         return impl
     if reference_impl_active():
-        return "reference"
-    if items > _MAX_ITEMS:
-        if not _size_fallback_warned:
-            _size_fallback_warned = True
-            warnings.warn(
-                f"plan_encode: {items} items exceed the Pallas tile cap "
-                f"({_MAX_ITEMS}); falling back to the lexsort reference "
-                "(bitwise-identical, slower). Pass impl='reference' to "
-                "acknowledge, or impl='pallas' to make this an error. "
-                "(warned once per process)",
-                RuntimeWarning, stacklevel=3)
         return "reference"
     return "pallas"
 
@@ -108,10 +64,11 @@ def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("axis", "slack", "interpret", "impl"))
+@functools.partial(jax.jit, static_argnames=("axis", "slack", "interpret",
+                                             "impl", "block"))
 def _balanced_assign(scores: jax.Array, axis: int, slack: float,
-                     interpret: bool | None, impl: str) -> jax.Array:
+                     interpret: bool | None, impl: str,
+                     block: int | None) -> jax.Array:
     # The assignment is pure int metadata — no gradient ever flows through
     # it (the STE surrogate lives in grouped_apply's VJP). Cutting the
     # tangent here keeps jvp/grad of plan-deriving callers from trying to
@@ -134,8 +91,8 @@ def _balanced_assign(scores: jax.Array, axis: int, slack: float,
     length = flat.shape[0]
     pref = jnp.argmax(flat, axis=-1).astype(jnp.int32)       # (L, M)
     strength = jnp.max(flat, axis=-1).astype(jnp.float32)
-    bj = min(256, _round_up(m, 128))
-    mp = _round_up(m, bj)
+    b = block if block else min(_DEFAULT_BLOCK, _round_up(m, 128))
+    mp = _round_up(m, b)
     # Padding items: sentinel group g, -inf strength — never counted, never
     # placed (their garbage slots are sliced off below).
     pref = jnp.pad(pref, ((0, 0), (0, mp - m)), constant_values=g)
@@ -143,7 +100,7 @@ def _balanced_assign(scores: jax.Array, axis: int, slack: float,
                        constant_values=-jnp.inf)
     slot = assign_slots(pref[..., None], strength[..., None],
                         pref[:, None, :], strength[:, None, :],
-                        g=g, cap=cap, bj=bj, interpret=interpret)
+                        g=g, cap=cap, bi=b, bj=b, interpret=interpret)
     slot = slot[:, :m, 0]                                    # (L, M)
 
     # Inverse permutation: bucket slot ids back to (G, cap) item lists.
@@ -159,22 +116,26 @@ def _balanced_assign(scores: jax.Array, axis: int, slack: float,
 
 def balanced_assign(scores: jax.Array, axis: int, slack: float = 1.0, *,
                     interpret: bool | None = None,
-                    impl: str | None = None) -> jax.Array:
+                    impl: str | None = None,
+                    block: int | None = None) -> jax.Array:
     """Deal items into equal-capacity groups by argmax preference.
 
     ``scores``: (..., M, G) if axis==1 (rows of IG) or (..., G, N) if
     axis==0 (columns of OG); leading dims batch over stacked layers.
     Returns (..., G, cap) int32 item ids with ``cap = ceil(M/G · slack)``
     (padding slots hold M). Bitwise-identical to
-    :func:`ref.ref_balanced_assign` for finite scores.
+    :func:`ref.ref_balanced_assign` for finite scores at any M — the
+    placement passes tile, so there is no kernel size cap.
 
-    Implementation selection (Pallas kernel vs lexsort reference) follows
-    :func:`resolve_impl`: explicit ``impl`` binds (oversized ``"pallas"``
-    raises), implicit oversize falls back with a one-time warning.
+    ``block`` overrides the placement tile side (must stay a multiple of
+    the 128-lane quantum for real-TPU layouts; tests force small tiles to
+    drive the multi-tile path under interpret mode). Implementation
+    selection (Pallas kernel vs lexsort reference) follows
+    :func:`resolve_impl`.
     """
     items = scores.shape[-2] if axis else scores.shape[-1]
     impl = resolve_impl(items, impl)
-    return _balanced_assign(scores, axis, slack, interpret, impl)
+    return _balanced_assign(scores, axis, slack, interpret, impl, block)
 
 
 def reference(scores: jax.Array, axis: int, slack: float = 1.0) -> jax.Array:

@@ -335,7 +335,8 @@ def _cache_len(slot: SlotSpec, max_seq: int) -> int:
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
-               dtype=None, *, params=None, per_slot: bool = False) -> dict:
+               dtype=None, *, params=None, per_slot: bool = False,
+               compact: bool | None = None) -> dict:
     """Decode caches, stacked (n_blocks, ...) per slot.
 
     ``params``: pass the model params to cache a :class:`~repro.core.
@@ -345,6 +346,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
     ``lm_apply``, and they ride the returned cache unchanged. Without
     params (or off the grouped path) ``cache["plans"]`` is ``()`` and
     grouped projections fall back to per-call re-encoding.
+
+    ``compact``: also attach the compact weights (``GroupPlan.wc`` — the
+    weight half of the OSEL encode output) so decode steps consume the
+    fused kernel path with zero per-call W gathers. Defaults to on
+    whenever ``params`` is given; pass ``False`` for a layout-only
+    PlanState (e.g. to measure the unfused path). The attached weights
+    snapshot this params version — re-attach at params boundaries
+    (:func:`refresh_cache_plans` does, even when the layout signature
+    certifies).
 
     ``per_slot``: allocate ``cache["pos"]`` as a (batch,) vector instead
     of a scalar — each batch row becomes an independent request *slot* at
@@ -376,6 +386,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
     if params is not None:
         state = encode_plans(params, cfg)
         if state.plans:               # grouped path: PlanState beside the KV
+            if compact is None or compact:
+                state = planenc.attach_compact(state, params)
             plans = state
     cache["plans"] = plans
     if cfg.encoder_layers:
@@ -438,16 +450,22 @@ def reset_slots(cache: dict, mask) -> dict:
     return out
 
 
-def plan_specs(cfg: ModelConfig):
+def plan_specs(cfg: ModelConfig, *, compact: bool = False):
     """Logical spec tree of the stack's cached PlanState (replicated: the
     compact metadata is small int/bool tensors consumed whole by every
     shard). ``()`` off the grouped path — matching ``init_cache`` /
-    ``TrainState.plans``."""
+    ``TrainState.plans``. ``compact=True`` mirrors a weight-attached
+    state (``init_cache(params=...)``'s default), whose ``wc`` leaves are
+    likewise replicated."""
     if cfg.flgw_groups <= 1 or cfg.flgw_path != "grouped":
         return ()
-    aplans = jax.eval_shape(
-        lambda k: encode_plans(lm_init(k, cfg)[0], cfg),
-        jax.random.PRNGKey(0))
+
+    def _abstract(k):
+        state = encode_plans(lm_init(k, cfg)[0], cfg)
+        if compact:
+            state = planenc.attach_compact(state, lm_init(k, cfg)[0])
+        return state
+    aplans = jax.eval_shape(_abstract, jax.random.PRNGKey(0))
     return jax.tree.map(lambda a: (None,) * a.ndim, aplans)
 
 
@@ -470,7 +488,7 @@ def cache_specs(cfg: ModelConfig, *, per_slot: bool = False) -> dict:
                 "state": ("layers", "batch", "heads", None, None),
                 "conv": ("layers", "batch", None, "ffn")}
     specs = {"pos": ("batch",) if per_slot else (), "blocks": blocks,
-             "plans": plan_specs(cfg)}
+             "plans": plan_specs(cfg, compact=True)}
     if cfg.encoder_layers:
         specs["encoder_out"] = ("batch", None, None)
     return specs

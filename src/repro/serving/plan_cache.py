@@ -28,6 +28,7 @@ from typing import Callable, Optional
 import jax
 
 from repro.core import encoder as planenc
+from repro.core import grouped
 from repro.core.grouped import iter_flgw_layers
 
 # Request boundaries pay one signature pass each; eagerly that is a long
@@ -81,6 +82,14 @@ def shared_plans(params: dict, *, encode: Callable[[], planenc.PlanState],
     if not isinstance(state, planenc.PlanState):
         raise TypeError(
             f"encode() must return a PlanState, got {type(state).__name__}")
+    # The key hashes the grouping *layout* only — weight values are
+    # invisible to it, so a weight-bearing state (attached compact
+    # weights, GroupPlan.wc) cached here would leak one params version's
+    # weights into every other version with the same layout. Strip them:
+    # consumers attach wc against their own params after the fetch
+    # (ServeSession._attach).
+    if grouped.has_compact(state.plans):
+        state = state._replace(plans=grouped.strip_compact(state.plans))
     with _LOCK:
         _STATS["encodes"] += 1
         _CACHE[key] = state

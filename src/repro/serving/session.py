@@ -68,6 +68,7 @@ class ServeSession:
                                     banded=banded)
         self._decode = jax.jit(decode) if jit else decode
         self._prefill = jax.jit(prefill) if jit else prefill
+        self._wc_memo = None
         self.plans = self._resolve_plans()
 
     # -- plan resolution ---------------------------------------------------
@@ -76,7 +77,15 @@ class ServeSession:
         """The session's PlanState under the current params — through the
         process-wide cache (one encode per params version) unless sharing
         is off; ``()`` under ``plan_policy="off"`` or off the grouped
-        path (matching ``init_cache`` without params)."""
+        path (matching ``init_cache`` without params).
+
+        The resolved state is *layout-only* — the shared cache is keyed
+        by the layout signature, which never hashes weight values, so
+        weight-bearing states must not live there (or in ``self.plans``,
+        which concurrent sessions share by identity). The compact weights
+        (``GroupPlan.wc``, the fused consume path's operand) are attached
+        session-locally at the consumption points (:meth:`new_cache`,
+        :meth:`refresh`, :meth:`prefill`) via :meth:`_attach`."""
         if self.plan_policy == "off" or not self._grouped:
             return ()
         encode = lambda: transformer.encode_plans(self.params, self.cfg)  # noqa: E731
@@ -84,6 +93,20 @@ class ServeSession:
             return encode()
         return plan_cache.shared_plans(self.params, encode=encode,
                                        slack=self._slack)
+
+    def _attach(self, state):
+        """Session-local OSEL handoff: this session's params compacted
+        onto the shared layout (``GroupPlan.wc``), memoized so an
+        unchanged (plans, params) pair costs zero re-gathers at request
+        boundaries. Never mutates or replaces the shared ``state``."""
+        if not state:
+            return state
+        memo = self._wc_memo
+        if memo and memo[0] is state and memo[1] is self.params:
+            return memo[2]
+        attached = planenc.attach_compact(state, self.params)
+        self._wc_memo = (state, self.params, attached)
+        return attached
 
     def update_params(self, params) -> None:
         """Publish a new params version to the session (online tuning).
@@ -111,7 +134,7 @@ class ServeSession:
         if not isinstance(cache.get("plans"), planenc.PlanState):
             return cache
         self.plans = self._resolve_plans()
-        return dict(cache, plans=self.plans)
+        return dict(cache, plans=self._attach(self.plans))
 
     # -- caches ------------------------------------------------------------
 
@@ -124,7 +147,7 @@ class ServeSession:
         """
         cache = transformer.init_cache(self.cfg, batch, max_seq, dtype,
                                        per_slot=per_slot)
-        cache["plans"] = self.plans if self._grouped and \
+        cache["plans"] = self._attach(self.plans) if self._grouped and \
             self.plan_policy != "off" else ()
         return cache
 
@@ -139,7 +162,7 @@ class ServeSession:
         defaults to the session's PlanState (policy-resolved); pass
         explicitly (e.g. ``cache["plans"]``) to override."""
         if plans is ...:
-            plans = self.plans if self._grouped and \
+            plans = self._attach(self.plans) if self._grouped and \
                 self.plan_policy != "off" else None
         if plans == ():
             plans = None

@@ -1,19 +1,3 @@
 import jax
-import pytest
 
 jax.config.update("jax_enable_x64", False)
-
-
-@pytest.fixture(autouse=True)
-def _isolate_size_fallback_latch():
-    """Snapshot/restore the plan-encode oversize-warning latch per test.
-
-    The latch is once-per-process state; without this, whichever test
-    touched it last decided whether any later test's oversize encode
-    could warn (order-dependent flakes across files).
-    """
-    from repro.kernels.plan_encode import ops as pe_ops
-
-    prev = pe_ops.size_fallback_warned()
-    yield
-    pe_ops.reset_size_fallback_warning(prev)

@@ -91,6 +91,80 @@ def test_grouped_matmul_balanced_plan_equals_masked_oracle():
 
 
 # ---------------------------------------------------------------------------
+# grouped_matmul_fused: cached W_c + in-kernel activation gather
+# ---------------------------------------------------------------------------
+
+def _fused_pair(m, n, g, b, slack, dtype, seed=None):
+    key = jax.random.PRNGKey(seed if seed is not None else m + n + g + b)
+    x = jax.random.normal(key, (b, m), jnp.float32).astype(dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (m, n),
+                          jnp.float32).astype(dtype)
+    ig = jax.random.normal(jax.random.fold_in(key, 2), (m, g))
+    og = jax.random.normal(jax.random.fold_in(key, 3), (g, n))
+    return x, w, make_plan(ig, og, slack)
+
+
+@pytest.mark.parametrize("m,n,g,b,slack", [
+    (64, 64, 4, 8, 1.0), (96, 128, 2, 4, 1.0), (160, 96, 8, 7, 1.3),
+    pytest.param(256, 256, 16, 8, 1.0, marks=pytest.mark.slow),
+    pytest.param(300, 200, 4, 16, 1.5, marks=pytest.mark.slow),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_bitwise_matches_gather_path(m, n, g, b, slack, dtype):
+    """The fused consume path (compact ``W_c`` + in-kernel activation
+    gather) is *bitwise* equal to the XLA-gather ``grouped_matmul`` —
+    same tile sizes, same accumulation order, identical gathered operands
+    — so callers can flip paths per call with no parity budget."""
+    x, w, plan = _fused_pair(m, n, g, b, slack, dtype)
+    wc = fops.compact_weights(w, plan.row_ids, plan.col_ids,
+                              plan.row_valid, plan.col_valid)
+    got = fops.grouped_matmul_fused(x, wc, plan.row_ids, plan.row_valid,
+                                    plan.col_ids, plan.col_valid, n=n,
+                                    interpret=True)
+    want = fops.grouped_matmul(x, w, plan.row_ids, plan.col_ids,
+                               plan.row_valid, plan.col_valid,
+                               interpret=True)
+    assert got.dtype == want.dtype
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_compact_weights_zeroes_invalid_slots():
+    """Invalid (padding) slots of W_c are zero — the property that makes
+    the fused path's sink-column gather annihilate padding rows."""
+    _, w, plan = _fused_pair(80, 48, 4, 3, 1.5, jnp.float32, seed=9)
+    wc = fops.compact_weights(w, plan.row_ids, plan.col_ids,
+                              plan.row_valid, plan.col_valid)
+    g, cap_m, cap_n = wc.shape
+    assert (cap_m, cap_n) == (plan.row_ids.shape[1], plan.col_ids.shape[1])
+    invalid = ~(np.asarray(plan.row_valid)[:, :, None]
+                & np.asarray(plan.col_valid)[:, None, :])
+    assert (np.asarray(wc)[invalid] == 0).all()
+    # valid slots are the straight double-gather of W
+    rid, cid = np.asarray(plan.row_ids), np.asarray(plan.col_ids)
+    want = np.asarray(w)[rid[:, :, None], cid[:, None, :]]
+    np.testing.assert_array_equal(np.where(invalid, 0, want), np.asarray(wc))
+
+
+def test_compact_weights_stacked_layers_fold_through_vmap():
+    """Stacked (scanned-decoder) leading dims: compact_weights vmaps and
+    each layer's slice is bitwise the per-layer call."""
+    layers = []
+    for i in range(3):
+        x, w, plan = _fused_pair(64, 96, 4, 5, 1.25, jnp.float32, seed=40 + i)
+        layers.append((w, plan))
+    ws = jnp.stack([w for w, _ in layers])
+    stack = lambda f: jnp.stack([f(p) for _, p in layers])  # noqa: E731
+    wcs = fops.compact_weights(ws, stack(lambda p: p.row_ids),
+                               stack(lambda p: p.col_ids),
+                               stack(lambda p: p.row_valid),
+                               stack(lambda p: p.col_valid))
+    for i, (w, plan) in enumerate(layers):
+        one = fops.compact_weights(w, plan.row_ids, plan.col_ids,
+                                   plan.row_valid, plan.col_valid)
+        np.testing.assert_array_equal(np.asarray(wcs[i]), np.asarray(one))
+
+
+# ---------------------------------------------------------------------------
 # osel_encode kernel
 # ---------------------------------------------------------------------------
 

@@ -130,59 +130,80 @@ def test_axis0_matches_transposed_axis1():
 
 
 # ---------------------------------------------------------------------------
+# Tiled placement: multi-tile parity (the lifted 4096 cap)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(130, 520), g=st.sampled_from([2, 4, 8]),
+       slack=st.sampled_from([1.0, 1.25, 1.5, 2.0]),
+       seed=st.integers(0, 2**31 - 1))
+def test_multi_tile_bitwise_matches_lexsort(m, g, seed, slack):
+    """Forced 128-item tiles drive the tiled two-pass placement (rank
+    accumulation across (bi, bj) tile pairs + cross-tile histogram prefix
+    sums) under CPU interpret mode: still bitwise vs the lexsort,
+    including slack>1 spill ordering across tile boundaries."""
+    scores = _scores(seed, m, g)
+    ref = np.asarray(pe_ref.ref_balanced_assign(scores, slack))
+    got = np.asarray(pe_ops.balanced_assign(scores, axis=1, slack=slack,
+                                            impl="pallas", block=128))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_cross_tile_spill_ordering_exact():
+    """Adversarial over-popularity: most items prefer group 0, so spills
+    chain across many tiles and groups — the overflow ranks must still
+    land every item in the lexsort's exact slot."""
+    key = jax.random.PRNGKey(17)
+    m, g = 640, 4
+    scores = jax.random.normal(key, (m, g))
+    # bias ~70% of items toward group 0 (spread over all tiles)
+    bias = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.7, (m,))
+    scores = scores.at[:, 0].add(jnp.where(bias, 10.0, 0.0))
+    for slack in (1.0, 1.3, 2.0):
+        ref = np.asarray(pe_ref.ref_balanced_assign(scores, slack))
+        got = np.asarray(pe_ops.balanced_assign(
+            scores, axis=1, slack=slack, impl="pallas", block=128))
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_oversize_encode_runs_kernel_bitwise():
+    """M > 4096 — the old ``_MAX_ITEMS`` wall — now runs the Pallas
+    kernel (explicitly pinned: no fallback, no warning) and stays bitwise
+    vs the lexsort."""
+    m, g, slack = 4352, 8, 1.3
+    scores = _scores(23, m, g)
+    ref = np.asarray(pe_ref.ref_balanced_assign(scores, slack))
+    got = np.asarray(pe_ops.balanced_assign(scores, axis=1, slack=slack,
+                                            impl="pallas"))
+    np.testing.assert_array_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
 # Implementation-selection policy (resolve_impl)
 # ---------------------------------------------------------------------------
 
 def test_resolve_impl_policy():
     """The single impl-selection policy, exposed for tests: explicit
-    choices bind, the shared reference switch and the size cap drive the
-    implicit fallbacks."""
+    choices bind; the shared reference switch drives the only implicit
+    fallback. Size no longer plays: the tiled placement has no cap."""
     import repro.kernels as kernels_mod
-    big = pe_ops._MAX_ITEMS + 1
     assert pe_ops.resolve_impl(64) == "pallas"
     assert pe_ops.resolve_impl(64, "pallas") == "pallas"
     assert pe_ops.resolve_impl(64, "reference") == "reference"
-    assert pe_ops.resolve_impl(big, "reference") == "reference"
+    # the old _MAX_ITEMS wall is gone: oversize stays on the kernel
+    assert pe_ops.resolve_impl(1 << 20) == "pallas"
+    assert pe_ops.resolve_impl(1 << 20, "pallas") == "pallas"
     with kernels_mod.use_reference_impl():
         assert pe_ops.resolve_impl(64) == "reference"
         # explicit choice beats the ambient switch
         assert pe_ops.resolve_impl(64, "pallas") == "pallas"
-    pe_ops.reset_size_fallback_warning(True)  # silence for this check
-    assert pe_ops.resolve_impl(big) == "reference"
     with pytest.raises(ValueError, match="impl must be"):
         pe_ops.resolve_impl(64, "mystery")
 
 
-def test_explicit_pallas_above_cap_raises():
-    """impl='pallas' is a contract, not a hint: above the VMEM tile cap it
-    must raise a pointed error instead of silently running the lexsort
-    reference (the pre-fix behavior, which made kernel perf runs lie)."""
-    big = pe_ops._MAX_ITEMS + 8
-    scores = jnp.zeros((big, 4))
-    with pytest.raises(ValueError, match="_MAX_ITEMS"):
-        pe_ops.balanced_assign(scores, axis=1, impl="pallas")
-    # axis=0 counts columns as items
-    with pytest.raises(ValueError, match="_MAX_ITEMS"):
-        pe_ops.balanced_assign(jnp.zeros((4, big)), axis=0, impl="pallas")
-    # ...and under the cap the explicit request is honoured
-    assert pe_ops.resolve_impl(pe_ops._MAX_ITEMS, "pallas") == "pallas"
-
-
-def test_implicit_size_fallback_warns_once_and_matches_reference():
-    """Implicit oversize encodes fall back to the reference with ONE
-    RuntimeWarning per process — and stay bitwise-identical to it."""
-    import warnings as w
-    big = pe_ops._MAX_ITEMS + 8
-    scores = jax.random.normal(jax.random.PRNGKey(3), (big, 4))
-    # re-arm the latch; the autouse conftest fixture restores it after
-    pe_ops.reset_size_fallback_warning()
-    with pytest.warns(RuntimeWarning, match="lexsort reference"):
-        got = pe_ops.balanced_assign(scores, axis=1)
-    assert pe_ops.size_fallback_warned()
-    ref = np.asarray(pe_ref.ref_balanced_assign(scores, 1.0))
-    np.testing.assert_array_equal(np.asarray(got), ref)
-    with w.catch_warnings(record=True) as caught:
-        w.simplefilter("always")
-        pe_ops.balanced_assign(scores * 2.0, axis=1)
-    assert not any(issubclass(c.category, RuntimeWarning)
-                   for c in caught), caught
+def test_size_fallback_machinery_retired():
+    """The oversize latch (`size_fallback_warned`) and its warning are
+    gone with the cap — the module no longer exposes them."""
+    assert not hasattr(pe_ops, "_MAX_ITEMS")
+    assert not hasattr(pe_ops, "size_fallback_warned")
+    assert not hasattr(pe_ops, "reset_size_fallback_warning")

@@ -79,7 +79,10 @@ def test_certify_tracks_online_tuning(served):
 
     sess.update_params(_flip_grouping(params))
     cache = sess.refresh(cache)
-    fresh = transformer.encode_plans(sess.params, cfg)
+    # session caches carry the compact weights (the fused-path operand):
+    # the expectation is the fresh encode with wc attached from new params
+    fresh = encoder.attach_compact(
+        transformer.encode_plans(sess.params, cfg), sess.params)
     assert int(cache["plans"].sig) == int(fresh.sig) != old_sig
     for a, b in zip(jax.tree.leaves(cache["plans"]), jax.tree.leaves(fresh)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
@@ -144,6 +147,60 @@ def test_shared_plans_one_encode_for_n_sessions(served, monkeypatch):
         assert s.plans is first                   # literally shared
     st = plan_cache.stats()
     assert st["encodes"] == 1 and st["hits"] == 3
+
+
+def test_fused_decode_no_per_call_make_plan(served, monkeypatch):
+    """Trace-count guard for the fused consume path: a cache built by the
+    session carries compact weights (``GroupPlan.wc`` — the fused
+    ``flgw_matmul`` prologue's operand), and decoding with it costs ZERO
+    ``make_plan`` calls and zero re-gathers of ``wc`` — the OSEL handoff
+    stays encode-once/consume-many, same as the XLA-gather path before."""
+    cfg, params = served
+    sess = ServeSession(cfg, params, plan_policy="trust")
+    cache = sess.new_cache(1, 8)
+    assert grouped.has_compact(cache["plans"].plans)
+    attached = cache["plans"]
+
+    calls = {"plan": 0, "attach": 0}
+    real_plan, real_attach = grouped.make_plan, grouped.attach_compact
+
+    def counting_plan(*a, **kw):
+        calls["plan"] += 1
+        return real_plan(*a, **kw)
+
+    def counting_attach(*a, **kw):
+        calls["attach"] += 1
+        return real_attach(*a, **kw)
+
+    monkeypatch.setattr(grouped, "make_plan", counting_plan)
+    monkeypatch.setattr(grouped, "attach_compact", counting_attach)
+    tok = jnp.zeros((1, 1), jnp.int32)
+    for i in range(3):
+        tok, cache = sess.decode(cache, tok, sess.greedy_positions(1, i))
+    assert calls["plan"] == 0
+    assert calls["attach"] == 0
+    # a second cache against the same (plans, params) pair reuses the
+    # session-local memo — still no re-gather
+    cache2 = sess.new_cache(1, 8)
+    assert cache2["plans"] is attached
+    assert calls["attach"] == 0
+
+
+def test_shared_cache_state_stays_weight_free(served):
+    """The process-wide plan cache is keyed by the layout signature, which
+    never hashes weight values — the states it holds (and ``session.plans``,
+    shared by identity) must therefore stay wc-free; weights attach only
+    session-locally at consumption points."""
+    cfg, params = served
+    sess = ServeSession(cfg, params)
+    assert not grouped.has_compact(sess.plans.plans)
+    cache = sess.new_cache(1, 8)
+    assert grouped.has_compact(cache["plans"].plans)
+    assert not grouped.has_compact(sess.plans.plans)  # untouched
+    # refresh certifies and re-attaches without polluting the shared state
+    cache = sess.refresh(cache)
+    assert grouped.has_compact(cache["plans"].plans)
+    assert not grouped.has_compact(sess.plans.plans)
 
 
 def test_new_params_version_encodes_once_more(served):

@@ -63,7 +63,10 @@ def test_refresh_cache_plans_fires_and_matches_fresh_encode(served):
 
     params2 = _flip_grouping(params)                 # online tuning
     refreshed = transformer.refresh_cache_plans(params2, cfg, cache)
-    fresh = transformer.encode_plans(params2, cfg)
+    # init_cache attaches compact weights (the fused-path operand), so the
+    # refresh hands back a fresh encode with wc re-gathered from params2
+    fresh = encoder.attach_compact(
+        transformer.encode_plans(params2, cfg), params2)
     # the refresh fired: new signature, different from the stale one...
     assert int(refreshed["plans"].sig) == int(fresh.sig)
     assert int(refreshed["plans"].sig) != int(cache["plans"].sig)
