@@ -41,7 +41,7 @@ def ic3net_flops_per_step(agents: int, obs_dim: int = 64) -> float:
     return agents * per_agent
 
 
-def main() -> dict:
+def main(write: bool = True) -> dict:
     out = {"fpga_peak_gflops": FPGA_PEAK, "cells": []}
     row("# fig11_throughput: modelled accelerator GFLOPS "
         f"(FPGA peak {FPGA_PEAK:.1f} GFLOPS)")
@@ -77,8 +77,15 @@ def main() -> dict:
         "paper_g16_gflops": 3629.48,
     }
     save("fig11_throughput", out)
+    if write:
+        write_bench_json("fig11_throughput", _model_payload(out))
+    return out
+
+
+def _model_payload(out: dict) -> dict:
+    """The accelerator-model section of the committed fig11 artifact."""
     mc = out["model_check"]
-    write_bench_json("fig11_throughput", {
+    return {
         "config": {"fpga_peak_gflops": FPGA_PEAK,
                    "util_dense": FPGA_UTIL_DENSE,
                    "util_sparse": FPGA_UTIL_SPARSE,
@@ -94,7 +101,96 @@ def main() -> dict:
             # bounds the paper's measured G=16 point, as it must
             "g16_upper_bounds_paper_anchor":
                 mc["g16_gflops"] >= mc["paper_g16_gflops"],
-        }})
+        }}
+
+
+def async_sweep(updates: int = 16, hidden: int = 32, batch: int = 8,
+                agents: int = 3, cadences: tuple = (1, 2, 4, 8),
+                check: bool = False, write: bool = True) -> dict:
+    """Actor/learner overlap vs the synchronous scan, same device count.
+
+    The decoupling lever fig11's on-chip dataflow models: the synchronous
+    scan pays a full forward+backward per rollout window, so its env-step
+    rate is pinned to the learner's clock. The async pipeline amortizes
+    one learner update over ``cadence`` actor windows (forward-only
+    rollouts against the published snapshot), so generated env-steps/s
+    grows with cadence while updates/s falls — the paper's
+    throughput-vs-staleness trade, measured. Every cell runs V-trace
+    (the correction that makes the staleness sound) after a short warmup
+    run so jit compiles are off the clock; acceptance is the best async
+    cell beating sync on env-steps/s at equal device count.
+
+    Writes the COMBINED committed artifact (accelerator model + this
+    sweep) so ``BENCH_fig11_throughput.json`` keeps one schema.
+    """
+    import jax
+
+    from repro.marl import async_train as async_mod
+    from repro.marl import envs, ic3net
+    from repro.marl import train as train_mod
+
+    cfg = ic3net.IC3NetConfig(hidden=hidden)
+    env, ecfg = envs.make("predator_prey", n_agents=agents)
+    tcfg = train_mod.TrainConfig(batch=batch)
+
+    row(f"# fig11 --async: sync scan vs actor/learner overlap "
+        f"(hidden={hidden}, batch={batch}, A={agents}, {updates} "
+        f"updates/point, {len(jax.devices())} device(s))")
+    row("variant", "cadence", "env_steps_per_s", "updates_per_s",
+        "max_staleness")
+
+    # sync baseline: warmup run compiles the scan chunk (its window length
+    # n is a static arg, so the warmup must use the measured length), the
+    # measured run reuses the compile cache
+    train_mod.train(cfg, ecfg, tcfg, iterations=updates, seed=0, env=env)
+    _, hist = train_mod.train(cfg, ecfg, tcfg, iterations=updates, seed=0,
+                              env=env)
+    sync = {"env_steps_per_s": hist[-1]["env_steps_per_s"],
+            "updates_per_s": hist[-1]["steps_per_s"]}
+    row("sync", "-", f"{sync['env_steps_per_s']:.0f}",
+        f"{sync['updates_per_s']:.2f}", 0)
+
+    cells = []
+    for cadence in cadences:
+        acfg = async_mod.AsyncConfig(
+            capacity=max(4, cadence), actors=cadence, correction="vtrace",
+            publish_every=1, max_staleness=2 * cadence + 2)
+        async_mod.async_train(cfg, ecfg, tcfg, acfg=acfg, updates=2,
+                              seed=0, env=env)              # warmup
+        _, hist = async_mod.async_train(cfg, ecfg, tcfg, acfg=acfg,
+                                        updates=updates, seed=0, env=env)
+        cell = {"cadence": cadence,
+                "env_steps_per_s": hist[-1]["env_steps_per_s"],
+                "updates_per_s": hist[-1]["updates_per_s"],
+                "max_staleness": max(h["staleness"] for h in hist)}
+        row("async", cadence, f"{cell['env_steps_per_s']:.0f}",
+            f"{cell['updates_per_s']:.2f}",
+            f"{cell['max_staleness']:.0f}")
+        cells.append(cell)
+
+    best = max(cells, key=lambda c: c["env_steps_per_s"])
+    out = {"sync": sync, "async_cells": cells, "best_cadence":
+           best["cadence"]}
+    row(f"# best async cadence {best['cadence']}: "
+        f"{best['env_steps_per_s']:.0f} env-steps/s vs sync "
+        f"{sync['env_steps_per_s']:.0f}")
+    save("fig11_throughput_async", out)
+
+    payload = _model_payload(main(write=False))
+    payload["config"]["async"] = {
+        "updates": updates, "hidden": hidden, "batch": batch,
+        "agents": agents, "cadences": list(cadences),
+        "correction": "vtrace", "devices": len(jax.devices())}
+    payload["results"]["async_sweep"] = out
+    payload["acceptance"]["async_env_steps_ge_sync"] = bool(
+        best["env_steps_per_s"] >= sync["env_steps_per_s"])
+    if write:
+        write_bench_json("fig11_throughput", payload)
+    if check:
+        bad = [k for k, v in payload["acceptance"].items() if not v]
+        if bad:
+            raise SystemExit(f"fig11 acceptance failed: {bad}")
+        row("# fig11 --check: all acceptance flags hold")
     return out
 
 
@@ -169,11 +265,25 @@ if __name__ == "__main__":
     ap.add_argument("--real", action="store_true",
                     help="sweep measured train() runs instead of the "
                          "accelerator model")
+    ap.add_argument("--async", dest="async_", action="store_true",
+                    help="measure the actor/learner overlap vs the sync "
+                         "scan and fold it into the committed artifact")
     ap.add_argument("--iterations", type=int, default=24)
-    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--updates", type=int, default=16,
+                    help="learner updates per --async cell")
+    ap.add_argument("--hidden", type=int, default=None,
+                    help="IC3Net hidden width (default: 64 for --real, "
+                         "32 for --async)")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="env batch of the --async sweep")
     ap.add_argument("--mesh", default=None,
                     help="ENV,AGENT shard counts: run the --real sweep on "
                          "the jax.sharding mesh path (e.g. 2,2)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless every acceptance flag holds "
+                         "(with --async)")
+    ap.add_argument("--no-write", action="store_true",
+                    help="skip refreshing the committed BENCH json")
     args = ap.parse_args()
     mesh = None
     if args.mesh:
@@ -184,8 +294,14 @@ if __name__ == "__main__":
             mesh = parse_marl_mesh(args.mesh)
         except ValueError as e:
             ap.error(str(e))
+    if args.check and not args.async_:
+        ap.error("--check gates the --async acceptance flags; pass --async")
     if args.real:
-        real_sweep(iterations=args.iterations, hidden=args.hidden,
+        real_sweep(iterations=args.iterations, hidden=args.hidden or 64,
                    mesh=mesh)
+    elif args.async_:
+        async_sweep(updates=args.updates, hidden=args.hidden or 32,
+                    batch=args.batch, check=args.check,
+                    write=not args.no_write)
     else:
-        main()
+        main(write=not args.no_write)

@@ -21,7 +21,10 @@ def main(argv=None) -> int:
     jobs = [
         ("fig10_osel (OSEL cycles/memory)", fig10_osel.main),
         ("table1_balance (workload deviation)", table1_balance.main),
-        ("fig11_throughput (accelerator model)", fig11_throughput.main),
+        # --no-write: the committed BENCH_fig11_throughput.json carries the
+        # --async overlap sweep; only an explicit --async run refreshes it
+        ("fig11_throughput (accelerator model)",
+         lambda: fig11_throughput.main(write=False)),
         ("fig12_breakdown (sparse-gen share)", fig12_breakdown.main),
         ("fig13_speedup (sparse vs dense)", fig13_speedup.main),
         # --no-write: the committed BENCH_serving.json is refreshed only
@@ -32,7 +35,7 @@ def main(argv=None) -> int:
     if not args.fast:
         from benchmarks import fig9_accuracy
         jobs.append(("fig9_accuracy (MARL accuracy vs sparsity)",
-                     lambda: fig9_accuracy.main([])))
+                     lambda: fig9_accuracy.main(["--no-write"])))
 
     failures = 0
     for name, fn in jobs:

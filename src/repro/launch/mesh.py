@@ -12,8 +12,87 @@ only data-parallel gradient traffic crosses it (DESIGN.md §4).
 """
 from __future__ import annotations
 
+import os
+import warnings
+
 import jax
 from jax.sharding import Mesh
+
+_DISTRIBUTED = {"initialized": False}
+
+
+def init_distributed(coordinator: str | None = None,
+                     num_processes: int | None = None,
+                     process_id: int | None = None, *,
+                     strict: bool = False) -> dict:
+    """Bring up ``jax.distributed`` for a multi-host mesh, with a fallback.
+
+    The PR-5 mesh engine is single-host: ``make_marl_mesh`` reshapes
+    ``jax.devices()``, which only sees other hosts' devices after
+    ``jax.distributed.initialize``. This helper owns that bring-up:
+
+    * arguments default to the standard env vars (``JAX_COORDINATOR`` /
+      ``COORDINATOR_ADDRESS``, ``JAX_NUM_PROCESSES``, ``JAX_PROCESS_ID``)
+      so launchers can configure it without code changes;
+    * idempotent — a second call returns the recorded topology instead of
+      re-initializing (jax raises otherwise);
+    * non-strict (default): any bring-up failure degrades to single-process
+      with a warning, so the same entry point runs on a laptop and a pod
+      (``strict=True`` re-raises — CI's 2-process smoke uses it to make a
+      botched rendezvous a failure instead of two silent singletons).
+
+    Returns ``{"distributed", "process_index", "process_count",
+    "local_devices", "global_devices"}``. Cross-process *collectives* are a
+    backend property (the CPU backend does not implement them); what this
+    enables everywhere is the global device view plus per-host data
+    feeding via :func:`host_local_batch`.
+    """
+    coordinator = coordinator or os.environ.get(
+        "JAX_COORDINATOR") or os.environ.get("COORDINATOR_ADDRESS")
+    if num_processes is None and os.environ.get("JAX_NUM_PROCESSES"):
+        num_processes = int(os.environ["JAX_NUM_PROCESSES"])
+    if process_id is None and os.environ.get("JAX_PROCESS_ID"):
+        process_id = int(os.environ["JAX_PROCESS_ID"])
+
+    if not _DISTRIBUTED["initialized"] and coordinator \
+            and num_processes and num_processes > 1:
+        try:
+            jax.distributed.initialize(
+                coordinator_address=coordinator,
+                num_processes=num_processes, process_id=process_id)
+            _DISTRIBUTED["initialized"] = True
+        except Exception as e:                      # noqa: BLE001
+            if strict:
+                raise
+            warnings.warn(
+                f"jax.distributed bring-up failed ({e!r}); continuing "
+                "single-process", RuntimeWarning, stacklevel=2)
+    return {
+        "distributed": _DISTRIBUTED["initialized"],
+        "process_index": jax.process_index(),
+        "process_count": jax.process_count(),
+        "local_devices": jax.local_device_count(),
+        "global_devices": jax.device_count(),
+    }
+
+
+def host_local_batch(global_batch: int) -> tuple[int, int]:
+    """Per-host slice of a global env batch: ``(local_batch, offset)``.
+
+    Multi-host data feeding: each process rolls out only its shard of the
+    global batch — process ``i`` owns rows ``[offset, offset + local)`` —
+    and the learner's mesh program addresses the batch globally. The
+    global batch must divide evenly (ragged shards would make per-host
+    array shapes disagree, which ``jax.make_array_from_process_local_data``
+    rejects anyway).
+    """
+    n = jax.process_count()
+    if global_batch % n:
+        raise ValueError(
+            f"global batch {global_batch} does not divide over {n} "
+            "processes; pick a multiple")
+    local = global_batch // n
+    return local, jax.process_index() * local
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

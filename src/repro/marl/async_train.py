@@ -1,0 +1,615 @@
+"""Async actor/learner MARL pipeline — IMPALA-style decoupled training.
+
+The synchronous engine (``repro.marl.train``) fuses rollout and learning
+into one ``lax.scan``: the learner idles while actors step environments
+and vice versa — the serialization the LearningGroup paper removes
+on-chip with its overlapped OSEL→core dataflow. This module splits the
+two clocks:
+
+* **actors** run :func:`repro.marl.train.rollout` (collect mode) against a
+  *published* :class:`ParamBundle` snapshot and push whole rollout windows
+  into a **device-resident trajectory queue** (:class:`TrajQueue`) — a
+  fixed-capacity ring buffer whose jitted :func:`queue_push` /
+  :func:`queue_pop` / :func:`queue_sample` keep the actor→learner handoff
+  on device (the host only mirrors scalar metadata, never the tensors);
+* the **learner** drains queue windows at its own cadence, re-unrolls the
+  policy over the stored trajectory (:func:`replay_terms` — the same
+  per-step ops as the rollout, via ``train._policy_terms``) and applies
+  the A2C update extended with an **off-policy correction**
+  (``AsyncConfig.correction``): ``"vtrace"`` (IMPALA), ``"clip"``
+  (one-sided clipped importance weights) or ``"none"`` (the pure
+  on-policy update — with queue depth 1 it is bitwise-identical to the
+  synchronous scan, the anchor the tests pin);
+* every ``publish_every`` updates the learner **publishes** a versioned
+  ``(params, PlanState, plan_signature)`` bundle. Publication certifies
+  the plans against the params via ``encoder.refresh_if_stale`` — exactly
+  the request-boundary gate ``ServeSession`` uses — so actors can never
+  step on a params/plans mismatch; :func:`adopt` re-certifies on the
+  actor side as a belt-and-suspenders swap gate.
+
+Staleness is bounded: every queue window is stamped with the version of
+the bundle that generated it, and the learner skips windows older than
+``max_staleness`` publications. At staleness 0 the V-trace targets
+provably collapse to the synchronous Monte-Carlo returns (clips ≥ 1 make
+every importance ratio exactly 1, and the V-terms telescope away), so the
+correction costs nothing while the pipeline is effectively on-policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoder
+from repro.marl import envs as envs_mod
+from repro.marl import ic3net
+from repro.marl import train as train_mod
+from repro.optim.optimizers import rmsprop
+from repro.sharding.partition import constrain
+
+CORRECTIONS = ("none", "clip", "vtrace")
+PUSH_POLICIES = ("overwrite", "drop")
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Knobs of the decoupled pipeline (rides beside ``TrainConfig``)."""
+    capacity: int = 4             # trajectory-queue depth (rollout windows)
+    actors: int = 1               # rollout windows generated per update
+    correction: str = "vtrace"    # off-policy correction: none|clip|vtrace
+    rho_clip: float = 1.0         # V-trace rho-bar / IS clip ceiling
+    c_clip: float = 1.0           # V-trace c-bar (trace cutting)
+    max_staleness: int = 8        # max version lag of a consumed window
+    publish_every: int = 1        # learner updates per params publication
+    push_policy: str = "overwrite"  # ring full: overwrite oldest | drop new
+    sample: str = "fifo"          # learner consumption: fifo | random
+
+    def __post_init__(self):
+        if self.correction not in CORRECTIONS:
+            raise ValueError(f"correction must be one of {CORRECTIONS}, "
+                             f"got {self.correction!r}")
+        if self.push_policy not in PUSH_POLICIES:
+            raise ValueError(f"push_policy must be one of {PUSH_POLICIES}, "
+                             f"got {self.push_policy!r}")
+        if self.sample not in ("fifo", "random"):
+            raise ValueError(f"sample must be fifo|random, "
+                             f"got {self.sample!r}")
+        if self.capacity < 1 or self.actors < 1 or self.publish_every < 1:
+            raise ValueError("capacity, actors and publish_every must be "
+                             ">= 1")
+
+
+class Trajectory(NamedTuple):
+    """One actor rollout window — everything the learner needs to replay.
+
+    ``obs``/``act``/``gates`` let the learner re-unroll the policy with
+    its own params (BPTT through the LSTM happens on the learner's
+    re-forward, as in IMPALA); ``logp`` is the *behavior* log-prob used by
+    the importance-ratio corrections; ``rew`` already carries the
+    freeze-after-done zeroing the rollout applies.
+    """
+    obs: jax.Array      # (B, T, A, obs_dim) float32
+    act: jax.Array      # (B, T, A) int32 sampled actions
+    gates: jax.Array    # (B, T, A) float32 sampled comm gates (new_gate_t)
+    rew: jax.Array      # (B, T, A) float32 rewards (post done-freeze)
+    logp: jax.Array     # (B, T, A) float32 behavior log pi(act)
+    succ: jax.Array     # (B,) bool episode success
+
+
+# --------------------------------------------------------------------------
+# Device-resident trajectory queue
+# --------------------------------------------------------------------------
+
+class TrajQueue(NamedTuple):
+    """Fixed-capacity ring buffer of rollout windows, living on device.
+
+    ``data`` holds every :class:`Trajectory` leaf with a leading capacity
+    axis; ``version`` stamps the params publication each slot was
+    generated under. ``head`` is the next write slot, ``count`` the number
+    of valid entries — the oldest valid entry sits at ``(head - count)
+    mod capacity``. All ops are jittable with static shapes, so pushes
+    and pops move zero trajectory bytes through host Python.
+    """
+    data: Any           # pytree of (C, ...) arrays
+    version: jax.Array  # (C,) int32
+    head: jax.Array     # () int32 — next write index, always < C
+    count: jax.Array    # () int32 — number of valid entries
+    pushed: jax.Array   # () int32 — accepted pushes (lifetime)
+    dropped: jax.Array  # () int32 — rejected pushes (push_policy="drop")
+
+    @property
+    def capacity(self) -> int:
+        return self.version.shape[0]
+
+
+def queue_init(capacity: int, example) -> TrajQueue:
+    """Empty queue whose slots are shaped like ``example`` (an abstract
+    ``ShapeDtypeStruct`` tree from ``jax.eval_shape`` or a concrete
+    trajectory)."""
+    data = jax.tree.map(
+        lambda x: jnp.zeros((capacity,) + tuple(x.shape), x.dtype), example)
+    z = jnp.zeros((), jnp.int32)
+    return TrajQueue(data=data,
+                     version=jnp.zeros((capacity,), jnp.int32),
+                     head=z, count=z, pushed=z, dropped=z)
+
+
+@partial(jax.jit, static_argnames=("policy",))
+def queue_push(q: TrajQueue, item, version,
+               policy: str = "overwrite") -> TrajQueue:
+    """Push one window. Ring full: ``"overwrite"`` replaces the oldest
+    entry (head == oldest when full), ``"drop"`` rejects the new one."""
+    cap = q.capacity
+    version = jnp.asarray(version, jnp.int32)
+    if policy == "drop":
+        accept = q.count < cap
+
+        def wr(buf, x):
+            return jnp.where(accept, buf.at[q.head].set(x), buf)
+        data = jax.tree.map(wr, q.data, item)
+        vers = jnp.where(accept, q.version.at[q.head].set(version),
+                         q.version)
+        step = accept.astype(jnp.int32)
+        return q._replace(
+            data=data, version=vers,
+            head=(q.head + step) % cap,
+            count=q.count + step,
+            pushed=q.pushed + step,
+            dropped=q.dropped + (1 - step))
+    data = jax.tree.map(lambda buf, x: buf.at[q.head].set(x), q.data, item)
+    return q._replace(
+        data=data, version=q.version.at[q.head].set(version),
+        head=(q.head + 1) % cap,
+        count=jnp.minimum(q.count + 1, cap),
+        pushed=q.pushed + 1)
+
+
+@jax.jit
+def queue_pop(q: TrajQueue):
+    """FIFO: return ``(item, version, q')`` for the oldest valid entry.
+
+    Popping an empty queue is a host-side contract violation (the host
+    mirrors ``count``); the returned slot contents are then unspecified
+    but ``count`` stays clamped at 0.
+    """
+    idx = (q.head - q.count) % q.capacity
+    item = jax.tree.map(lambda buf: buf[idx], q.data)
+    return item, q.version[idx], \
+        q._replace(count=jnp.maximum(q.count - 1, 0))
+
+
+@jax.jit
+def queue_sample(q: TrajQueue, key):
+    """Uniform sample over the valid entries (without consuming):
+    ``(item, version)``. Deterministic under a fixed key."""
+    j = jax.random.randint(key, (), 0, jnp.maximum(q.count, 1))
+    idx = (q.head - q.count + j) % q.capacity
+    return jax.tree.map(lambda buf: buf[idx], q.data), q.version[idx]
+
+
+# --------------------------------------------------------------------------
+# Versioned params publication
+# --------------------------------------------------------------------------
+
+class ParamBundle(NamedTuple):
+    """What the learner publishes and actors consume: a params snapshot,
+    the PlanState encoded from it, and a monotonically increasing version.
+    The invariant — ``plans.sig == plan_signature(params)`` whenever plans
+    are non-empty — is established by :func:`publish` and re-checked by
+    :func:`adopt`, so an actor can never run grouped kernels against
+    metadata of weights that no longer exist."""
+    params: Any
+    plans: Any          # encoder.PlanState (empty off the grouped path)
+    version: jax.Array  # () int32
+
+
+def publish(params, plans, version, cfg: ic3net.IC3NetConfig) -> ParamBundle:
+    """Stamp a new bundle, certifying plans against params.
+
+    The learner's plans may be stale relative to its just-updated params
+    (the refresh schedule amortizes encodes); publication is a boundary
+    the staleness must not cross — ``encoder.refresh_if_stale`` re-encodes
+    iff the grouping layout moved, exactly like ``ServeSession`` certifies
+    at request boundaries. Traceable (``lax.cond`` inside).
+    """
+    if isinstance(plans, encoder.PlanState) and plans.plans:
+        plans = encoder.refresh_if_stale(params, plans, cfg.flgw)
+    return ParamBundle(params, plans, jnp.asarray(version, jnp.int32))
+
+
+def adopt(bundle: ParamBundle, cfg: ic3net.IC3NetConfig) -> ParamBundle:
+    """Actor-side swap gate: certify the incoming bundle before stepping.
+
+    :func:`publish` already guarantees consistency, but the actor is the
+    party that pays for a violation (grouped projections against foreign
+    metadata), so the swap re-runs the same signature-gated certification
+    — one ~half-encode signature pass when consistent, one re-encode when
+    not. This is the guard ``test_adopt_heals_a_mismatched_bundle`` and
+    the trace-count tests pin.
+    """
+    if isinstance(bundle.plans, encoder.PlanState) and bundle.plans.plans:
+        plans = encoder.refresh_if_stale(bundle.params, bundle.plans,
+                                         cfg.flgw)
+        return bundle._replace(plans=plans)
+    return bundle
+
+
+def bundle_consistent(bundle: ParamBundle) -> jax.Array:
+    """Bool scalar: do the bundle's plans certify against its params?
+    (Trivially true off the grouped path.) Host-checkable guard used by
+    the pipeline's paranoid mode and the publication tests."""
+    if not (isinstance(bundle.plans, encoder.PlanState)
+            and bundle.plans.plans):
+        return jnp.ones((), bool)
+    return encoder.plan_signature(bundle.params) == bundle.plans.sig
+
+
+# --------------------------------------------------------------------------
+# Actor and learner computations (both jitted once per config)
+# --------------------------------------------------------------------------
+
+def actor_rollout(params, key, cfg, ecfg, tcfg, env: envs_mod.Env,
+                  plans=None) -> Trajectory:
+    """One batched rollout window against a published snapshot.
+
+    Key handling mirrors :func:`train.a2c_loss` exactly (same
+    ``split(key, batch)``), so with queue depth 1 and ``correction=
+    "none"`` the pipeline consumes the very same episodes the synchronous
+    scan would have generated — the bitwise anchor.
+    """
+    keys = jax.random.split(key, tcfg.batch)
+    keys = constrain(keys, ("env",) + (None,) * (keys.ndim - 1))
+    rew, logp, val, ent, gate_logp, gates, obs, act, succ = jax.vmap(
+        lambda k: train_mod.rollout(params, k, cfg, ecfg, env, plans,
+                                    collect=True))(keys)
+    del val, ent, gate_logp   # learner re-derives them from its own params
+    return Trajectory(obs=obs, act=act, gates=gates, rew=rew, logp=logp,
+                      succ=succ)
+
+
+def replay_terms(params, cfg, traj: Trajectory, plans=None):
+    """Re-unroll the policy over a stored trajectory with the *learner's*
+    params: (logp, val, ent, gate_logp), each (B, T, A).
+
+    Identical per-step math to the rollout (``train._policy_terms`` on
+    the same ``policy_step`` forward), with the stored gate decisions
+    replayed — ``gate_in[t] = gates[t-1]`` (ones at t=0, matching
+    ``ic3net.initial_state``) — so at equal params the outputs are
+    bitwise the rollout's and gradients see the same BPTT graph the
+    synchronous loss differentiates.
+    """
+    gate_in = jnp.concatenate(
+        [jnp.ones_like(traj.gates[:, :1]), traj.gates[:, :-1]], axis=1)
+
+    def one_env(obs_seq, act_seq, gin_seq, gout_seq):
+        hc, _ = ic3net.initial_state(cfg)
+
+        def step(hc, inp):
+            obs, act, gin, gout = inp
+            logits, value, gate_logits, hc = ic3net.policy_step(
+                params, cfg, obs, hc, gin, plans)
+            logp_a, entropy, gate_logp = train_mod._policy_terms(
+                logits, gate_logits, act, gout)
+            return hc, (logp_a, value, entropy, gate_logp)
+
+        _, outs = jax.lax.scan(step, hc,
+                               (obs_seq, act_seq, gin_seq, gout_seq))
+        return outs
+
+    logp, val, ent, gate_logp = jax.vmap(one_env)(
+        traj.obs, traj.act, gate_in, traj.gates)
+    logp, val, ent = (constrain(t, ("env", None, "agent"))
+                      for t in (logp, val, ent))
+    return logp, val, ent, gate_logp
+
+
+def vtrace(target_logp, behavior_logp, rew, val, *, gamma: float,
+           rho_clip: float = 1.0, c_clip: float = 1.0):
+    """V-trace targets (Espeholt et al. '18) over (B, T, A) tensors.
+
+    Bootstraps with V_T = 0 — the episodes are fixed-length windows whose
+    rewards are zeroed after ``done`` (the rollout's freeze), which is
+    exactly the regime where the synchronous loss's Monte-Carlo returns
+    terminate at zero. Hence at staleness 0 (ratios exactly 1, clips
+    >= 1) the recursion telescopes to those MC returns:
+    ``vs_t = r_t + gamma * vs_{t+1}`` and ``pg_adv = returns - val`` —
+    the on-policy update, provably.
+
+    Returns ``(vs, pg_adv, rho)``; gradients are *not* stopped here (the
+    caller stops them — the loss needs ``val`` live elsewhere).
+    """
+    ratio = jnp.exp(target_logp - behavior_logp)
+    rho = jnp.minimum(ratio, rho_clip)
+    c = jnp.minimum(ratio, c_clip)
+    v_next = jnp.concatenate([val[:, 1:], jnp.zeros_like(val[:, :1])], 1)
+    delta = rho * (rew + gamma * v_next - val)
+
+    def back(acc, xs):
+        d, c_t = xs
+        acc = d + gamma * c_t * acc
+        return acc, acc
+
+    _, err = jax.lax.scan(
+        back, jnp.zeros_like(val[:, 0]),
+        (delta[:, ::-1].swapaxes(0, 1), c[:, ::-1].swapaxes(0, 1)))
+    err = err[::-1].swapaxes(0, 1)            # vs_t - V_t, (B, T, A)
+    vs = err + val
+    vs_next = jnp.concatenate([vs[:, 1:], jnp.zeros_like(vs[:, :1])], 1)
+    pg_adv = rho * (rew + gamma * vs_next - val)
+    return vs, pg_adv, rho
+
+
+def learner_loss(params, traj: Trajectory, cfg, tcfg, acfg: AsyncConfig,
+                 plans=None):
+    """Loss of one consumed window under ``acfg.correction``.
+
+    ``"none"`` routes the replayed terms through the *same*
+    :func:`train.a2c_terms` the synchronous path uses — zero loss-math
+    divergence, the bitwise anchor. ``"vtrace"`` swaps the MC returns for
+    V-trace targets; ``"clip"`` keeps MC returns but scales the policy
+    gradient by one-sided clipped importance weights.
+    """
+    logp, val, ent, gate_logp = replay_terms(params, cfg, traj, plans)
+    if acfg.correction == "none":
+        return train_mod.a2c_terms(traj.rew, logp, val, ent, gate_logp,
+                                   traj.gates, traj.succ, tcfg)
+
+    if acfg.correction == "vtrace":
+        vs, pg_adv, rho = vtrace(logp, traj.logp, traj.rew, val,
+                                 gamma=tcfg.gamma, rho_clip=acfg.rho_clip,
+                                 c_clip=acfg.c_clip)
+        pg = -jnp.mean(logp * jax.lax.stop_gradient(pg_adv))
+        vloss = jnp.mean((jax.lax.stop_gradient(vs) - val) ** 2)
+        mean_is = jnp.mean(rho)
+    else:                                     # "clip"
+        def disc(carry, r):
+            carry = r + tcfg.gamma * carry
+            return carry, carry
+        _, returns = jax.lax.scan(disc, jnp.zeros_like(traj.rew[:, 0]),
+                                  traj.rew[:, ::-1].swapaxes(0, 1))
+        returns = returns[::-1].swapaxes(0, 1)
+        adv = returns - val
+        rho = jnp.minimum(jnp.exp(logp - traj.logp), acfg.rho_clip)
+        pg = -jnp.mean(logp * jax.lax.stop_gradient(rho * adv))
+        vloss = jnp.mean(adv ** 2)
+        mean_is = jnp.mean(rho)
+    eloss = -jnp.mean(ent)
+    gloss = jnp.mean(traj.gates)
+    loss = pg + tcfg.value_coef * vloss + tcfg.entropy_coef * eloss \
+        + tcfg.gate_coef * gloss
+    return loss, {"success": jnp.mean(traj.succ.astype(jnp.float32)),
+                  "return": jnp.mean(jnp.sum(traj.rew, axis=1)),
+                  "loss": loss, "mean_is": mean_is}
+
+
+def learner_update(params, opt_state, traj: Trajectory, cfg, tcfg,
+                   acfg: AsyncConfig, plans=None):
+    """(params', opt_state', metrics) — one learner step on one window."""
+    (_, metrics), grads = jax.value_and_grad(
+        learner_loss, has_aux=True)(params, traj, cfg, tcfg, acfg, plans)
+    metrics = dict(metrics,
+                   mask_sparsity=train_mod._mean_mask_sparsity(params, cfg))
+    params, opt_state = rmsprop(params, grads, opt_state, lr=tcfg.lr)
+    return params, opt_state, metrics
+
+
+# --------------------------------------------------------------------------
+# The pipeline driver
+# --------------------------------------------------------------------------
+
+# module-level jits: one compile cache shared by every async_train call
+# (the sync path's _train_chunk gets the same treatment in train.py)
+_jit_actor = partial(jax.jit, static_argnames=("cfg", "ecfg", "tcfg",
+                                               "env"))(actor_rollout)
+_jit_update = partial(jax.jit, static_argnames=("cfg", "tcfg",
+                                                "acfg"))(learner_update)
+_jit_publish = partial(jax.jit, static_argnames=("cfg",))(publish)
+
+
+class QueueDriver:
+    """Host-side handle on the device queue: jitted push/pop plus a scalar
+    metadata mirror (count + per-slot versions), so staleness decisions
+    never force a device sync. Thread-safe — the threaded pipeline's
+    actor and learner share one driver under ``lock``.
+    """
+
+    def __init__(self, capacity: int, example, push_policy: str):
+        self.q = queue_init(capacity, example)
+        self.push_policy = push_policy
+        self.versions: list[int] = []          # oldest first
+        self.lock = threading.Lock()
+
+    def __len__(self) -> int:
+        return len(self.versions)
+
+    def push(self, traj: Trajectory, version: int) -> bool:
+        with self.lock:
+            if (self.push_policy == "drop"
+                    and len(self.versions) >= self.q.capacity):
+                self.q = queue_push(self.q, traj, version,
+                                    policy=self.push_policy)
+                return False
+            self.q = queue_push(self.q, traj, version,
+                                policy=self.push_policy)
+            self.versions.append(version)
+            if len(self.versions) > self.q.capacity:   # overwrote oldest
+                self.versions.pop(0)
+            return True
+
+    def pop(self):
+        with self.lock:
+            if not self.versions:
+                raise IndexError("pop from an empty trajectory queue")
+            traj, ver, self.q = queue_pop(self.q)
+            return traj, self.versions.pop(0)
+
+    def sample(self, key):
+        with self.lock:
+            if not self.versions:
+                raise IndexError("sample from an empty trajectory queue")
+            traj, ver = queue_sample(self.q, key)
+            return traj, ver
+
+    def peek_version(self) -> int:
+        """Version stamp of the oldest entry (host mirror, no device op)."""
+        with self.lock:
+            if not self.versions:
+                raise IndexError("peek on an empty trajectory queue")
+            return self.versions[0]
+
+
+def _history_entry(metrics, *, staleness, depth) -> dict:
+    ms = {k: float(v) for k, v in metrics.items()}
+    ms["staleness"] = float(staleness)
+    ms["queue_depth"] = float(depth)
+    return ms
+
+
+def async_train(cfg: ic3net.IC3NetConfig, ecfg=None,
+                tcfg: train_mod.TrainConfig = None,
+                acfg: AsyncConfig = None, updates: int = 100,
+                seed: int = 0, log_every: int = 0,
+                env: str | envs_mod.Env = "predator_prey",
+                schedule=None, threads: bool = False,
+                check_publication: bool = False):
+    """Run the decoupled pipeline for ``updates`` learner steps.
+
+    Returns ``(params, history)`` like :func:`train.train`; each history
+    entry additionally carries ``staleness`` (version lag of the consumed
+    window), ``queue_depth``, ``mean_is`` (corrections only) and the
+    decoupled throughput pair — ``env_steps_per_s`` counts *generated*
+    env steps (the actor clock), ``updates_per_s`` the learner clock.
+
+    The default driver interleaves deterministically (``acfg.actors``
+    pushes, then one learner step — reproducible, and with depth 1 +
+    ``correction="none"`` bitwise-equal to the sync scan); ``threads=
+    True`` runs the actor on its own Python thread for real dispatch
+    overlap, at the cost of a nondeterministic interleaving.
+
+    ``schedule.warmup_steps`` (the dense G-ramp) is a synchronous-loop
+    feature — the published snapshot would need a per-version ramp state
+    — and is rejected here; run the warmup synchronously, then hand the
+    params to the async pipeline.
+    """
+    if isinstance(env, str):
+        env = envs_mod.get(env)
+    if ecfg is None:
+        ecfg = env.config_cls()
+    tcfg = tcfg or train_mod.TrainConfig()
+    acfg = acfg or AsyncConfig()
+    if schedule is not None and schedule.warmup_steps > 0:
+        raise NotImplementedError(
+            "async_train does not run the dense-warmup G-ramp; warm up "
+            "with train.train(...) first, then continue async")
+    cfg, key, params, opt_state = train_mod._init(cfg, ecfg, env, seed)
+    plans = train_mod._encode_plans(params, cfg)
+    jit_actor, jit_update, jit_publish = _jit_actor, _jit_update, _jit_publish
+
+    version = 0
+    bundle = jit_publish(params, plans, version, cfg)
+    if check_publication:
+        assert bool(bundle_consistent(bundle)), \
+            "publication produced a params/PlanState signature mismatch"
+    example = jax.eval_shape(
+        lambda p, k, pl: actor_rollout(p, k, cfg, ecfg, tcfg, env, pl),
+        params, key, bundle.plans)
+    queue = QueueDriver(acfg.capacity, example, acfg.push_policy)
+
+    history: list[dict] = []
+    env_steps_window = tcfg.batch * ecfg.max_steps
+    produced = {"windows": 0}
+    stop = threading.Event()
+    publish_lock = threading.Lock()
+
+    def one_actor_push(k):
+        b = bundle            # snapshot reference (publication swaps it)
+        traj = jit_actor(b.params, k, cfg, ecfg, tcfg, env, b.plans)
+        queue.push(traj, int(b.version))
+        produced["windows"] += 1
+
+    actor_thread = None
+    if threads:
+        akey = jax.random.fold_in(key, 0x5eed)
+
+        def actor_loop():
+            nonlocal akey
+            while not stop.is_set():
+                if len(queue) >= acfg.capacity \
+                        and acfg.push_policy == "drop":
+                    time.sleep(0)             # yield; learner will drain
+                    continue
+                akey, k = jax.random.split(akey)
+                with publish_lock:
+                    one_actor_push(k)
+
+        actor_thread = threading.Thread(target=actor_loop, daemon=True)
+
+    t0 = time.perf_counter()
+    if actor_thread:
+        actor_thread.start()
+    try:
+        for it in range(updates):
+            if not threads:
+                for _ in range(acfg.actors):
+                    key, k = jax.random.split(key)
+                    one_actor_push(k)
+            else:
+                while not len(queue):         # wait for the actor clock
+                    time.sleep(0)
+            # learner: staleness bound first — evict windows over it (the
+            # host version mirror decides; versions are nondecreasing in
+            # FIFO order, so draining the front leaves only fresh entries)
+            while len(queue) \
+                    and version - queue.peek_version() > acfg.max_staleness:
+                queue.pop()
+            traj = ver = None
+            if len(queue):
+                if acfg.sample == "random":
+                    key, k = jax.random.split(key)
+                    traj, ver = queue.sample(k)
+                else:
+                    traj, ver = queue.pop()
+            if traj is None:
+                # everything in flight was over the bound — generate an
+                # on-policy window so the learner never starves
+                key, k = jax.random.split(key)
+                with publish_lock:
+                    bundle = jit_publish(params, plans, version, cfg)
+                    one_actor_push(k)
+                traj, ver = queue.pop()
+            plans = train_mod._refresh_plans(params, plans, it, cfg=cfg,
+                                             schedule=schedule)
+            params, opt_state, metrics = jit_update(
+                params, opt_state, traj, cfg, tcfg, acfg, plans)
+            version += 1
+            if version % acfg.publish_every == 0:
+                with publish_lock:
+                    bundle = jit_publish(params, plans, version, cfg)
+                if check_publication:
+                    assert bool(bundle_consistent(bundle)), \
+                        "published params/PlanState signature mismatch " \
+                        f"at version {version}"
+            history.append(_history_entry(
+                metrics, staleness=version - 1 - ver, depth=len(queue)))
+            if log_every and it % log_every == 0:
+                print(f"update {it:5d} success "
+                      f"{history[-1]['success']:.3f} return "
+                      f"{history[-1]['return']:.3f} staleness "
+                      f"{history[-1]['staleness']:.0f}")
+    finally:
+        stop.set()
+        if actor_thread:
+            actor_thread.join(timeout=30)
+    dt = max(time.perf_counter() - t0, 1e-9)
+    env_rate = produced["windows"] * env_steps_window / dt
+    upd_rate = updates / dt
+    for ms in history:
+        ms["env_steps_per_s"] = env_rate
+        ms["updates_per_s"] = upd_rate
+        ms["steps_per_s"] = upd_rate          # sync-history compatibility
+    return params, history

@@ -17,6 +17,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class EnvConfig(NamedTuple):
@@ -36,7 +37,9 @@ class EnvState(NamedTuple):
 
 
 # actions: 0=stay, 1=up, 2=down, 3=left, 4=right
-_MOVES = jnp.array([[0, 0], [-1, 0], [1, 0], [0, -1], [0, 1]], jnp.int32)
+# numpy so importing this module stays free of JAX computations (a
+# device-committed constant here would lock out jax.distributed.initialize)
+_MOVES = np.array([[0, 0], [-1, 0], [1, 0], [0, -1], [0, 1]], np.int32)
 N_ACTIONS = 5
 
 
@@ -77,7 +80,8 @@ def step(state: EnvState, actions: jax.Array,
          cfg: EnvConfig) -> tuple[EnvState, jax.Array, jax.Array]:
     """actions: (A,) int32. Returns (new_state, rewards (A,), done ())."""
     # Arrived agents stay on the prey (IC3Net freezes them).
-    moves = jnp.where(state.arrived[:, None], 0, _MOVES[actions])
+    moves = jnp.where(state.arrived[:, None], 0,
+                      jnp.asarray(_MOVES)[actions])
     pos = jnp.clip(state.pos + moves, 0, cfg.size - 1)
     on_prey = jnp.all(pos == state.prey[None, :], axis=1)
     arrived = state.arrived | on_prey

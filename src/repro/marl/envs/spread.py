@@ -17,6 +17,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class EnvConfig(NamedTuple):
@@ -35,7 +36,9 @@ class EnvState(NamedTuple):
 
 
 # actions: 0=stay, 1=up, 2=down, 3=left, 4=right
-_MOVES = jnp.array([[0, 0], [-1, 0], [1, 0], [0, -1], [0, 1]], jnp.int32)
+# numpy so importing this module stays free of JAX computations (a
+# device-committed constant here would lock out jax.distributed.initialize)
+_MOVES = np.array([[0, 0], [-1, 0], [1, 0], [0, -1], [0, 1]], np.int32)
 N_ACTIONS = 5
 
 
@@ -81,7 +84,8 @@ def observe(state: EnvState, cfg: EnvConfig) -> jax.Array:
 def step(state: EnvState, actions: jax.Array,
          cfg: EnvConfig) -> tuple[EnvState, jax.Array, jax.Array]:
     """actions: (A,) int32. Returns (new_state, rewards (A,), done ())."""
-    pos = jnp.clip(state.pos + _MOVES[actions], 0, cfg.size - 1)
+    pos = jnp.clip(state.pos + jnp.asarray(_MOVES)[actions],
+                   0, cfg.size - 1)
     nstate = EnvState(pos=pos, landmarks=state.landmarks, t=state.t + 1)
     # shared shaping: mean over landmarks of the distance to the nearest agent
     dist = jnp.sum(jnp.abs(pos[:, None, :] - state.landmarks[None, :, :]),

@@ -70,9 +70,34 @@ class TrainConfig:
     parallel: bool = False
 
 
+def _policy_terms(logits, gate_logits, action, new_gate):
+    """Per-step loss terms from one policy forward + the realised actions.
+
+    Shared by the on-policy :func:`rollout` and the async learner's replay
+    (``repro.marl.async_train.replay_terms``): both must derive the exact
+    same (logp, entropy, gate_logp) ops from (logits, gate_logits), or the
+    decoupled pipeline could never be bitwise-checked against the
+    synchronous scan. ``action``/``new_gate`` are the realised (sampled or
+    replayed) decisions — integers/0-1 floats, no gradient flows into
+    them.
+    """
+    logp = jax.nn.log_softmax(logits)
+    logp_a = jnp.take_along_axis(logp, action[:, None], 1)[:, 0]
+    entropy = -jnp.sum(jax.nn.softmax(logits) * logp, axis=-1)
+    gate_logp = jax.nn.log_softmax(gate_logits)[:, 1] * new_gate
+    return logp_a, entropy, gate_logp
+
+
 def rollout(params, key, cfg: ic3net.IC3NetConfig, ecfg, env: envs_mod.Env,
-            plans=None):
-    """One full episode for one env. Returns per-step tensors + success."""
+            plans=None, collect: bool = False):
+    """One full episode for one env. Returns per-step tensors + success.
+
+    ``collect=True`` (the async actor path) additionally returns the raw
+    ``(obs, action)`` sequences so a learner process can re-unroll the
+    policy over the stored trajectory — the sampled gates already ride the
+    default outputs. The default graph is unchanged: the extra stacking
+    only exists when requested.
+    """
     k_env, k_act = jax.random.split(key)
     state = env.reset(k_env, ecfg)
     hc, gate = ic3net.initial_state(cfg)
@@ -83,40 +108,39 @@ def rollout(params, key, cfg: ic3net.IC3NetConfig, ecfg, env: envs_mod.Env,
         logits, value, gate_logits, hc = ic3net.policy_step(
             params, cfg, obs, hc, gate, plans)
         action = jax.random.categorical(k, logits)              # (A,)
-        logp = jax.nn.log_softmax(logits)
-        logp_a = jnp.take_along_axis(logp, action[:, None], 1)[:, 0]
-        entropy = -jnp.sum(jax.nn.softmax(logits) * logp, axis=-1)
         kg, _ = jax.random.split(k)
         new_gate = jax.random.bernoulli(
             kg, jax.nn.softmax(gate_logits)[:, 1]).astype(jnp.float32)
+        logp_a, entropy, gate_logp = _policy_terms(
+            logits, gate_logits, action, new_gate)
         nstate, reward, ndone = env.step(state, action, ecfg)
         # freeze transitions after done
         reward = jnp.where(done, 0.0, reward)
         nstate = jax.tree.map(
             lambda a, b: jnp.where(done, a, b), state, nstate)
-        out = (reward, logp_a, value, entropy,
-               jax.nn.log_softmax(gate_logits)[:, 1] * new_gate, new_gate)
+        out = (reward, logp_a, value, entropy, gate_logp, new_gate)
+        if collect:
+            out = out + (obs, action)
         return (nstate, hc, new_gate, done | ndone), out
 
     keys = jax.random.split(k_act, ecfg.max_steps)
-    (state, _, _, _), (rew, logp, val, ent, gate_logp, gates) = \
-        jax.lax.scan(step_fn, (state, hc, gate,
-                               jnp.zeros((), bool)), keys)
-    return rew, logp, val, ent, gate_logp, gates, env.success(state)
+    (state, _, _, _), outs = jax.lax.scan(
+        step_fn, (state, hc, gate, jnp.zeros((), bool)), keys)
+    return outs + (env.success(state),)
 
 
-def a2c_loss(params, key, cfg, ecfg, tcfg: TrainConfig, env: envs_mod.Env,
-             plans=None):
-    keys = jax.random.split(key, tcfg.batch)
-    # Mesh path: the rollout batch is the env-axis workload. The logical
-    # constraints are inert (no-ops) unless tracing happens under
-    # partition.use_constraints(mesh) — single-device runs never pay them.
-    keys = constrain(keys, ("env",) + (None,) * (keys.ndim - 1))
-    rew, logp, val, ent, gate_logp, gates, succ = jax.vmap(
-        lambda k: rollout(params, k, cfg, ecfg, env, plans))(keys)
-    rew, logp, val, ent = (constrain(t, ("env", None, "agent"))
-                           for t in (rew, logp, val, ent))
-    # returns-to-go, (B, T, A)
+def a2c_terms(rew, logp, val, ent, gate_logp, gates, succ,
+              tcfg: TrainConfig):
+    """A2C loss + metrics from per-step trajectory tensors, all (B, T, A).
+
+    The loss core shared by the synchronous path (:func:`a2c_loss`, which
+    differentiates through the rollout that produced the tensors) and the
+    async learner (``repro.marl.async_train``, which differentiates
+    through a replay of a stored trajectory): discounted returns-to-go,
+    advantage policy gradient, value regression, entropy and gate
+    regularizers. Gradients flow through ``logp``/``val``/``ent``/
+    ``gate_logp``; ``rew``/``gates``/``succ`` are data.
+    """
     def disc(carry, r):
         carry = r + tcfg.gamma * carry
         return carry, carry
@@ -135,6 +159,20 @@ def a2c_loss(params, key, cfg, ecfg, tcfg: TrainConfig, env: envs_mod.Env,
                   "loss": loss}
 
 
+def a2c_loss(params, key, cfg, ecfg, tcfg: TrainConfig, env: envs_mod.Env,
+             plans=None):
+    keys = jax.random.split(key, tcfg.batch)
+    # Mesh path: the rollout batch is the env-axis workload. The logical
+    # constraints are inert (no-ops) unless tracing happens under
+    # partition.use_constraints(mesh) — single-device runs never pay them.
+    keys = constrain(keys, ("env",) + (None,) * (keys.ndim - 1))
+    rew, logp, val, ent, gate_logp, gates, succ = jax.vmap(
+        lambda k: rollout(params, k, cfg, ecfg, env, plans))(keys)
+    rew, logp, val, ent = (constrain(t, ("env", None, "agent"))
+                           for t in (rew, logp, val, ent))
+    return a2c_terms(rew, logp, val, ent, gate_logp, gates, succ, tcfg)
+
+
 def _mean_mask_sparsity(params, cfg: ic3net.IC3NetConfig) -> jax.Array:
     """Mean realised mask sparsity over the FLGW layers (0 when dense)."""
     fl = cfg.flgw
@@ -148,18 +186,17 @@ def _mean_mask_sparsity(params, cfg: ic3net.IC3NetConfig) -> jax.Array:
 
 def maybe_refresh_plans(params, plans, it, cfg: ic3net.IC3NetConfig,
                         schedule: Optional[SparsitySchedule]):
-    """Amortized OSEL: re-encode the FLGW plan cache only when due.
+    """Amortized OSEL refresh — a thin delegate to the one implementation.
 
-    ``plans`` is the PlanState carried through the training loop;
-    :func:`repro.core.encoder.maybe_refresh` decides per the schedule's
-    ``refresh`` mode — fixed period (``it % refresh_every == 0``), or
-    change-driven from the carried argmax signature — and re-encodes via
-    one ``encode_plans`` pass, reusing the stale plans otherwise. The
-    empty state (non-grouped configs) passes through untouched; ``it`` may
-    be a traced int32 (``lax.cond`` inside).
+    :func:`repro.core.encoder.maybe_refresh` owns the whole policy (fixed
+    period, change-driven signature compare, hybrid staleness bound;
+    ``lax.cond`` inside, so ``it`` may be a traced int32; empty PlanStates
+    pass through untouched). The sync scan carry, the host-loop mirror
+    and the async learner loop (``repro.marl.async_train``) all call this
+    same delegate — any refresh-behavior divergence between the three
+    loops is a bug, pinned by ``test_maybe_refresh_plans_is_pure_delegate``.
+    This function adds nothing beyond unwrapping ``cfg.flgw``.
     """
-    if not plans:
-        return plans
     return encoder.maybe_refresh(params, plans, it, cfg.flgw, schedule)
 
 

@@ -14,8 +14,8 @@ Surface:
 * :func:`~repro.serving.stream.synthetic_requests` — open-loop Geometric
   load generator (the Traffic Junction ``arrival_stream`` idiom).
 * ``repro.serving.steps`` — the jittable decode/prefill factories the
-  session builds on (``repro.train.step.make_serve_step`` /
-  ``make_prefill_step`` remain as deprecated shims over these).
+  session builds on (the sole surface: the PR-6 ``repro.train.step``
+  deprecation shims are retired).
 """
 from repro.serving import plan_cache  # noqa: F401
 from repro.serving.scheduler import (  # noqa: F401

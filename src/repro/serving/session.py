@@ -8,8 +8,8 @@ it: the params version being served, the jitted prefill/decode steps, the
 cache factory for both layouts (lockstep scalar-``pos`` and per-slot),
 and one explicit ``plan_policy`` knob governing every plan-cache decision
 — both the continuous-batching scheduler (``repro.serving.scheduler``)
-and the lockstep path build on it. The old entry points survive as thin
-deprecated shims in ``repro.train.step``.
+and the lockstep path build on it. (The ``repro.train.step`` deprecation
+shims that bridged the move are retired.)
 
 Plan resolution goes through the process-wide cache
 (``repro.serving.plan_cache``): concurrent sessions and requests against

@@ -1,10 +1,8 @@
 from repro.train.state import TrainState, init_state, state_specs
 from repro.train.loss import chunked_cross_entropy
-from repro.train.step import (make_train_step, make_serve_step,
-                              make_prefill_step, pick_q_chunk)
+from repro.train.step import make_train_step, pick_q_chunk
 
 __all__ = [
     "TrainState", "init_state", "state_specs", "chunked_cross_entropy",
-    "make_train_step", "make_serve_step", "make_prefill_step",
-    "pick_q_chunk",
+    "make_train_step", "pick_q_chunk",
 ]

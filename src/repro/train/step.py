@@ -6,8 +6,11 @@ microbatch gradient accumulation (scan), global-norm clip, optimizer update.
 
 The serving factories that used to live here (``make_serve_step`` /
 ``make_prefill_step``) moved to ``repro.serving.steps`` behind the unified
-:class:`repro.serving.ServeSession` API; the names below survive as thin
-deprecated shims so existing callers keep resolving.
+:class:`repro.serving.ServeSession` API; the deprecation shims that bridged
+the move are gone — use ``repro.serving.make_decode_step`` /
+``repro.serving.make_prefill_step`` (old ``make_serve_step(...,
+refresh_plans=True)`` maps to ``make_decode_step(...,
+certify_each_step=True)``).
 
 Everything is shape-static: the dry-run lowers these exact functions against
 ShapeDtypeStructs, and the real launcher jits them with the same shardings.
@@ -15,7 +18,6 @@ ShapeDtypeStructs, and the real launcher jits them with the same shardings.
 from __future__ import annotations
 
 import functools
-import warnings
 from typing import Any, Optional
 
 import jax
@@ -129,47 +131,3 @@ def make_train_step(cfg: ModelConfig, *, optimizer: str = "adamw",
         return new_state, metrics
 
     return train_step
-
-
-def make_serve_step(cfg: ModelConfig, *, banded: bool = False,
-                    unroll_blocks: bool = False,
-                    refresh_plans: bool = False):
-    """Deprecated shim — the serving tier moved to ``repro.serving``.
-
-    Use :class:`repro.serving.ServeSession` (or, for callers managing
-    their own jit boundary, ``repro.serving.make_decode_step``). The old
-    ``refresh_plans=True`` kwarg maps to ``certify_each_step=True``;
-    request-boundary certification is the session's ``plan_policy=
-    "certify"``. Behavior is unchanged — this delegates.
-    """
-    warnings.warn(
-        "repro.train.step.make_serve_step is deprecated; use "
-        "repro.serving.ServeSession (plan_policy='certify'|'trust'|'off') "
-        "or repro.serving.make_decode_step instead.",
-        DeprecationWarning, stacklevel=2)
-    from repro.serving.steps import make_decode_step
-    return make_decode_step(cfg, banded=banded, unroll_blocks=unroll_blocks,
-                            certify_each_step=refresh_plans)
-
-
-def make_prefill_step(cfg: ModelConfig, *, banded: bool = False,
-                      q_chunk: Optional[int] = None,
-                      ssd_unroll: bool = False,
-                      unroll_blocks: bool = False,
-                      attn_identity: bool = False):
-    """Deprecated shim — the serving tier moved to ``repro.serving``.
-
-    Use :class:`repro.serving.ServeSession` or ``repro.serving.
-    make_prefill_step``. The old certify-caller-plans behavior is the new
-    default ``plan_policy="certify"``. Behavior is unchanged — this
-    delegates.
-    """
-    warnings.warn(
-        "repro.train.step.make_prefill_step is deprecated; use "
-        "repro.serving.ServeSession (plan_policy='certify'|'trust'|'off') "
-        "or repro.serving.make_prefill_step instead.",
-        DeprecationWarning, stacklevel=2)
-    from repro.serving.steps import make_prefill_step as _mk
-    return _mk(cfg, plan_policy="certify", banded=banded, q_chunk=q_chunk,
-               ssd_unroll=ssd_unroll, unroll_blocks=unroll_blocks,
-               attn_identity=attn_identity)

@@ -1,0 +1,426 @@
+"""Async actor/learner pipeline: queue semantics, off-policy corrections,
+staleness bounds, and the plan-consistent publication contract.
+
+The anchors this file pins:
+
+* queue depth 1 + ``correction="none"`` is BITWISE the synchronous
+  ``lax.scan`` path (dense and grouped) — the decoupling itself changes
+  nothing until staleness does;
+* V-trace at staleness 0 reduces exactly to the on-policy update (the
+  telescoping argument in ``async_train.vtrace``'s docstring, checked
+  numerically and end-to-end);
+* the learner never consumes a window older than ``max_staleness``
+  publications;
+* actors never step on a params/PlanState signature mismatch:
+  :func:`~repro.marl.async_train.publish` certifies at the boundary,
+  :func:`~repro.marl.async_train.adopt` heals a corrupted bundle, and the
+  actor step itself traces zero ``make_plan`` calls.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encoder, grouped
+from repro.core.schedule import SparsitySchedule
+from repro.launch import mesh as mesh_lib
+from repro.marl import async_train as at
+from repro.marl import envs as envs_mod
+from repro.marl import ic3net
+from repro.marl import train as train_mod
+
+PP = envs_mod.get("predator_prey")
+
+
+def _tiny_ecfg(**kw):
+    base = dict(n_agents=2, size=3, vision=2, max_steps=6)
+    base.update(kw)
+    return PP.config_cls(**base)
+
+
+def _assert_trees_equal(a, b, bitwise=True):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        if bitwise:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=1e-5, rtol=1e-5)
+
+
+# -- trajectory queue --------------------------------------------------------
+
+def _item(i, shape=(2, 3)):
+    return {"x": jnp.full(shape, i, jnp.float32),
+            "n": jnp.full((), i, jnp.int32)}
+
+
+def test_queue_fifo_and_wraparound():
+    q = at.queue_init(3, jax.eval_shape(lambda: _item(0)))
+    for i in range(5):                     # 5 pushes into capacity 3
+        q = at.queue_push(q, _item(i), i)
+    assert int(q.count) == 3 and int(q.pushed) == 5
+    got = []
+    for _ in range(3):
+        item, ver, q = at.queue_pop(q)
+        assert int(item["n"]) == int(ver)
+        got.append(int(ver))
+    assert got == [2, 3, 4]                # oldest two overwritten, FIFO out
+    assert int(q.count) == 0
+
+
+def test_queue_drop_policy_rejects_when_full():
+    q = at.queue_init(2, jax.eval_shape(lambda: _item(0)))
+    for i in range(4):
+        q = at.queue_push(q, _item(i), i, policy="drop")
+    assert int(q.count) == 2
+    assert int(q.pushed) == 2 and int(q.dropped) == 2
+    item, ver, q = at.queue_pop(q)
+    assert int(ver) == 0                   # the first two survived
+    item, ver, q = at.queue_pop(q)
+    assert int(ver) == 1
+
+
+def test_queue_pop_past_empty_clamps():
+    q = at.queue_init(2, jax.eval_shape(lambda: _item(0)))
+    q = at.queue_push(q, _item(7), 7)
+    _, ver, q = at.queue_pop(q)
+    assert int(ver) == 7 and int(q.count) == 0
+    _, _, q = at.queue_pop(q)              # contract violation, but clamped
+    assert int(q.count) == 0
+
+
+def test_queue_sample_is_deterministic_and_uniform_over_valid():
+    q = at.queue_init(4, jax.eval_shape(lambda: _item(0)))
+    for i in range(6):                     # wraps: valid = {2, 3, 4, 5}
+        q = at.queue_push(q, _item(i), i)
+    key = jax.random.PRNGKey(0)
+    a, va = at.queue_sample(q, key)
+    b, vb = at.queue_sample(q, key)
+    assert int(va) == int(vb)              # fixed key => same draw
+    _assert_trees_equal(a, b)
+    seen = {int(at.queue_sample(q, jax.random.PRNGKey(s))[1])
+            for s in range(64)}
+    assert seen <= {2, 3, 4, 5}            # never a dead slot
+    assert len(seen) == 4                  # and every live one reachable
+
+
+def test_queue_driver_mirrors_device_metadata():
+    drv = at.QueueDriver(2, jax.eval_shape(lambda: _item(0)),
+                         push_policy="overwrite")
+    for i in range(3):
+        drv.push(_item(i), i)
+    assert len(drv) == 2 and int(drv.q.count) == 2
+    assert drv.peek_version() == 1         # 0 was overwritten
+    _, ver = drv.pop()
+    assert ver == 1 and len(drv) == 1 == int(drv.q.count)
+
+
+# -- maybe_refresh_plans is a pure delegate ----------------------------------
+
+def test_maybe_refresh_plans_is_pure_delegate():
+    """The sync scan, host loop and async learner drive ONE refresh
+    implementation: ``train.maybe_refresh_plans`` must be bitwise
+    ``encoder.maybe_refresh(params, plans, it, cfg.flgw, schedule)`` for
+    every refresh mode — any divergence is a bug. Both sides run jitted
+    (``it`` traced), the way every loop actually drives them."""
+    import functools
+    cfg, _, params, _ = train_mod._init(
+        ic3net.IC3NetConfig(hidden=8, flgw_groups=4), _tiny_ecfg(), PP, 0)
+    plans = encoder.encode_plans(params, cfg.flgw)
+    moved = jax.tree.map(lambda x: x, params)
+    for _, p in encoder.iter_flgw_layers(moved):
+        p["ig"], p["og"] = -p["ig"], -p["og"]
+    raw = functools.partial(jax.jit, static_argnames=("cfg", "schedule"))(
+        encoder.maybe_refresh)
+    schedules = [None] + [
+        SparsitySchedule(groups=4, refresh_every=3, refresh=m)
+        for m in encoder.REFRESH_MODES]
+    for sched in schedules:
+        for it in (0, 1, 3):
+            for prm in (params, moved):
+                got = train_mod._refresh_plans(prm, plans, it, cfg=cfg,
+                                               schedule=sched)
+                want = raw(prm, plans, it, cfg=cfg.flgw, schedule=sched)
+                assert int(got.sig) == int(want.sig)
+                _assert_trees_equal(got, want)
+
+
+# -- correction = none: bitwise parity with the synchronous scan -------------
+
+@pytest.mark.parametrize("groups", [1, 4])
+def test_depth1_no_correction_bitwise_matches_sync_scan(groups):
+    """The decoupling acceptance bar: queue depth 1, one actor window per
+    update, correction off => the async pipeline IS the synchronous scan,
+    bitwise, on both the dense and the grouped (plan-consuming) path."""
+    cfg = ic3net.IC3NetConfig(hidden=16, flgw_groups=groups)
+    ecfg = _tiny_ecfg()
+    tcfg = train_mod.TrainConfig(batch=4)
+    acfg = at.AsyncConfig(capacity=1, actors=1, correction="none",
+                          publish_every=1)
+    p_async, h_async = at.async_train(cfg, ecfg, tcfg, acfg=acfg,
+                                      updates=3, seed=0,
+                                      check_publication=True)
+    p_sync, h_sync = train_mod.train(cfg, ecfg, tcfg, iterations=3, seed=0)
+    _assert_trees_equal(p_async, p_sync)
+    np.testing.assert_array_equal([h["loss"] for h in h_async],
+                                  [h["loss"] for h in h_sync])
+    np.testing.assert_array_equal([h["success"] for h in h_async],
+                                  [h["success"] for h in h_sync])
+    assert all(h["staleness"] == 0 for h in h_async)
+
+
+def test_replay_terms_reproduce_rollout_terms_at_equal_params():
+    """The learner's re-unroll over a stored window is the same graph the
+    rollout ran: at equal params the replayed (logp, val, ent, gate_logp)
+    must be bitwise the actor's."""
+    cfg = ic3net.IC3NetConfig(hidden=16)
+    ecfg = _tiny_ecfg()
+    tcfg = train_mod.TrainConfig(batch=4)
+    cfg, key, params, _ = train_mod._init(cfg, ecfg, PP, 0)
+    key, k = jax.random.split(key)
+    keys = jax.random.split(k, tcfg.batch)
+    rew, logp, val, ent, gate_logp, gates, obs, act, succ = jax.vmap(
+        lambda kk: train_mod.rollout(params, kk, cfg, ecfg, PP,
+                                     collect=True))(keys)
+    traj = at.Trajectory(obs=obs, act=act, gates=gates, rew=rew,
+                         logp=logp, succ=succ)
+    r_logp, r_val, r_ent, r_glogp = at.replay_terms(params, cfg, traj)
+    for got, want in ((r_logp, logp), (r_val, val), (r_ent, ent),
+                      (r_glogp, gate_logp)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# -- V-trace -----------------------------------------------------------------
+
+def test_vtrace_on_policy_reduces_to_mc_returns():
+    """rho = c = 1 (equal behavior/target policies) telescopes the V-trace
+    recursion into plain discounted returns-to-go: vs = returns and
+    pg_adv = returns - val — exactly the synchronous A2C quantities."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    rew = jax.random.normal(k1, (3, 7, 2))
+    val = jax.random.normal(k2, (3, 7, 2))
+    logp = jax.random.normal(k3, (3, 7, 2))
+    gamma = 0.9
+    vs, pg_adv, rho = at.vtrace(logp, logp, rew, val, gamma=gamma)
+    np.testing.assert_array_equal(np.asarray(rho), 1.0)
+    returns = np.zeros_like(np.asarray(rew))
+    acc = np.zeros((3, 2))
+    for t in range(6, -1, -1):
+        acc = np.asarray(rew)[:, t] + gamma * acc
+        returns[:, t] = acc
+    np.testing.assert_allclose(np.asarray(vs), returns, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(pg_adv),
+                               returns - np.asarray(val), atol=1e-5)
+
+
+def test_vtrace_pipeline_at_staleness0_matches_sync_update():
+    """End-to-end: correction="vtrace" with depth 1 / publish-every-update
+    (staleness 0 throughout) must land on the synchronous params —
+    allclose, not bitwise: the V-trace vloss target algebraically equals
+    (returns - val) but associates its FP reductions differently."""
+    cfg = ic3net.IC3NetConfig(hidden=16, flgw_groups=4)
+    ecfg = _tiny_ecfg()
+    tcfg = train_mod.TrainConfig(batch=4)
+    acfg = at.AsyncConfig(capacity=1, actors=1, correction="vtrace")
+    p_async, h_async = at.async_train(cfg, ecfg, tcfg, acfg=acfg,
+                                      updates=2, seed=0)
+    p_sync, _ = train_mod.train(cfg, ecfg, tcfg, iterations=2, seed=0)
+    assert all(h["staleness"] == 0 for h in h_async)
+    assert all(h["mean_is"] == 1.0 for h in h_async)
+    _assert_trees_equal(p_async, p_sync, bitwise=False)
+
+
+def test_clip_correction_on_policy_matches_sync_update():
+    cfg = ic3net.IC3NetConfig(hidden=16)
+    ecfg = _tiny_ecfg()
+    tcfg = train_mod.TrainConfig(batch=4)
+    acfg = at.AsyncConfig(capacity=1, actors=1, correction="clip")
+    p_async, h_async = at.async_train(cfg, ecfg, tcfg, acfg=acfg,
+                                      updates=2, seed=0)
+    p_sync, _ = train_mod.train(cfg, ecfg, tcfg, iterations=2, seed=0)
+    assert all(h["mean_is"] == 1.0 for h in h_async)
+    _assert_trees_equal(p_async, p_sync, bitwise=False)
+
+
+def test_vtrace_training_reaches_sync_reward_under_staleness():
+    """The acceptance run: with real staleness (publish every 2 updates,
+    queue depth 2) V-trace training on predator_prey lands in the same
+    success band as the synchronous fig9-style run at equal budget."""
+    cfg = ic3net.IC3NetConfig(hidden=32)
+    ecfg = _tiny_ecfg()
+    tcfg = train_mod.TrainConfig(batch=16)
+    acfg = at.AsyncConfig(capacity=2, actors=1, correction="vtrace",
+                          publish_every=2, max_staleness=4)
+    p_s, h_s = train_mod.train(cfg, ecfg, tcfg, iterations=40, seed=1)
+    p_a, h_a = at.async_train(cfg, ecfg, tcfg, acfg=acfg, updates=40,
+                              seed=1)
+    assert max(h["staleness"] for h in h_a) >= 1   # genuinely off-policy
+    sync_last = np.mean([h["success"] for h in h_s[-10:]])
+    async_last = np.mean([h["success"] for h in h_a[-10:]])
+    assert async_last >= sync_last - 0.1
+    # and it learned at all (the tiny-task sanity bar the sync test uses)
+    async_first = np.mean([h["success"] for h in h_a[:5]])
+    assert async_last >= async_first - 0.05
+
+
+# -- staleness bound ---------------------------------------------------------
+
+def test_learner_never_consumes_over_the_staleness_bound():
+    """Windows older than max_staleness publications are evicted, never
+    trained on — even when the actor cadence floods the queue."""
+    cfg = ic3net.IC3NetConfig(hidden=16)
+    ecfg = _tiny_ecfg()
+    tcfg = train_mod.TrainConfig(batch=2)
+    acfg = at.AsyncConfig(capacity=8, actors=3, correction="vtrace",
+                          max_staleness=1, publish_every=2)
+    _, hist = at.async_train(cfg, ecfg, tcfg, acfg=acfg, updates=8, seed=0)
+    assert len(hist) == 8
+    assert max(h["staleness"] for h in hist) <= 1
+
+
+def test_max_staleness_zero_forces_on_policy():
+    cfg = ic3net.IC3NetConfig(hidden=16)
+    ecfg = _tiny_ecfg()
+    tcfg = train_mod.TrainConfig(batch=2)
+    acfg = at.AsyncConfig(capacity=4, actors=2, correction="vtrace",
+                          max_staleness=0, publish_every=3)
+    _, hist = at.async_train(cfg, ecfg, tcfg, acfg=acfg, updates=6, seed=0)
+    assert all(h["staleness"] == 0 for h in hist)
+
+
+# -- plan-consistent publication ---------------------------------------------
+
+def _grouped_setup():
+    cfg, key, params, _ = train_mod._init(
+        ic3net.IC3NetConfig(hidden=16, flgw_groups=4), _tiny_ecfg(), PP, 0)
+    plans = encoder.encode_plans(params, cfg.flgw)
+    return cfg, key, params, plans
+
+
+def _move_layouts(params):
+    moved = jax.tree.map(lambda x: x, params)
+    for _, p in encoder.iter_flgw_layers(moved):
+        p["ig"], p["og"] = -p["ig"], -p["og"]
+    return moved
+
+
+def test_publish_certifies_plans_against_params():
+    """Publication is the boundary staleness must not cross: publishing
+    NEW params with the OLD PlanState must hand actors a bundle whose
+    plans are bitwise a fresh encode of the new params."""
+    cfg, _, params, plans = _grouped_setup()
+    moved = _move_layouts(params)
+    bundle = at.publish(moved, plans, 1, cfg)
+    assert bool(at.bundle_consistent(bundle))
+    fresh = encoder.encode_plans(moved, cfg.flgw)
+    assert int(bundle.plans.sig) == int(fresh.sig)
+    _assert_trees_equal(bundle.plans, fresh)
+    assert int(bundle.version) == 1
+
+
+def test_adopt_heals_a_mismatched_bundle():
+    """The actor-side swap gate: a corrupted bundle (params/plans from
+    different versions) is detected by bundle_consistent and healed by
+    adopt — actors can never run grouped kernels on foreign metadata."""
+    cfg, _, params, plans = _grouped_setup()
+    moved = _move_layouts(params)
+    bad = at.ParamBundle(moved, plans, jnp.asarray(1, jnp.int32))
+    assert not bool(at.bundle_consistent(bad))
+    healed = at.adopt(bad, cfg)
+    assert bool(at.bundle_consistent(healed))
+    _assert_trees_equal(healed.plans, encoder.encode_plans(moved, cfg.flgw))
+    # a consistent bundle passes through bitwise (certify, no re-encode)
+    good = at.publish(params, plans, 0, cfg)
+    same = at.adopt(good, cfg)
+    _assert_trees_equal(same.plans, good.plans)
+
+
+def test_actor_step_traces_zero_plan_encodes(monkeypatch):
+    """Actors only CONSUME published plans: tracing the actor rollout with
+    a certified bundle must hit make_plan zero times — all encode work
+    lives behind the publication boundary."""
+    cfg, key, params, plans = _grouped_setup()
+    bundle = at.publish(params, plans, 0, cfg)
+    calls = {"n": 0}
+    real = grouped.make_plan
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(grouped, "make_plan", counting)
+    ecfg = _tiny_ecfg()
+    tcfg = train_mod.TrainConfig(batch=2)
+    jax.eval_shape(
+        lambda p, k, pl: at.actor_rollout(p, k, cfg, ecfg, tcfg, PP, pl),
+        bundle.params, key, bundle.plans)
+    assert calls["n"] == 0
+
+
+def test_async_train_check_publication_holds_across_versions():
+    """The end-to-end version guard: every published bundle over a short
+    grouped run certifies (the in-driver assertions fire otherwise)."""
+    cfg = ic3net.IC3NetConfig(hidden=16, flgw_groups=4)
+    _, hist = at.async_train(cfg, _tiny_ecfg(),
+                             train_mod.TrainConfig(batch=2),
+                             acfg=at.AsyncConfig(capacity=2, actors=1,
+                                                 publish_every=2),
+                             updates=4, seed=0, check_publication=True)
+    assert len(hist) == 4
+
+
+def test_async_rejects_dense_warmup_schedule():
+    sched = SparsitySchedule(groups=4, refresh_every=1, warmup_steps=5)
+    with pytest.raises(NotImplementedError, match="warm up"):
+        at.async_train(ic3net.IC3NetConfig(hidden=16, flgw_groups=4),
+                       _tiny_ecfg(), train_mod.TrainConfig(batch=2),
+                       schedule=sched, updates=1)
+
+
+# -- threaded overlap and distributed helpers --------------------------------
+
+def test_threaded_pipeline_runs_and_respects_bounds():
+    cfg = ic3net.IC3NetConfig(hidden=16)
+    ecfg = _tiny_ecfg()
+    tcfg = train_mod.TrainConfig(batch=2)
+    acfg = at.AsyncConfig(capacity=4, actors=1, correction="vtrace",
+                          max_staleness=2, publish_every=1)
+    _, hist = at.async_train(cfg, ecfg, tcfg, acfg=acfg, updates=5, seed=0,
+                             threads=True)
+    assert len(hist) == 5
+    assert max(h["staleness"] for h in hist) <= 2
+    assert threading.active_count() >= 1   # actor thread joined cleanly
+
+
+def test_init_distributed_falls_back_to_single_process(monkeypatch):
+    for var in ("JAX_COORDINATOR", "COORDINATOR_ADDRESS",
+                "JAX_NUM_PROCESSES", "JAX_PROCESS_ID"):
+        monkeypatch.delenv(var, raising=False)
+    info = mesh_lib.init_distributed()
+    assert info["distributed"] is False
+    assert info["process_count"] == 1 and info["process_index"] == 0
+    assert info["global_devices"] >= info["local_devices"] >= 1
+
+
+def test_host_local_batch_slices_evenly(monkeypatch):
+    local, offset = mesh_lib.host_local_batch(16)
+    assert (local, offset) == (16, 0)      # single process owns everything
+    # a simulated 4-host topology: process 2 owns rows [8, 12)
+    monkeypatch.setattr(mesh_lib.jax, "process_count", lambda: 4)
+    monkeypatch.setattr(mesh_lib.jax, "process_index", lambda: 2)
+    assert mesh_lib.host_local_batch(16) == (4, 8)
+    with pytest.raises(ValueError, match="does not divide"):
+        mesh_lib.host_local_batch(17)
+
+
+def test_async_config_validates():
+    with pytest.raises(ValueError, match="correction"):
+        at.AsyncConfig(correction="nope")
+    with pytest.raises(ValueError, match="push_policy"):
+        at.AsyncConfig(push_policy="nope")
+    with pytest.raises(ValueError, match=">= 1"):
+        at.AsyncConfig(capacity=0)

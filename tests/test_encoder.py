@@ -12,6 +12,7 @@ from repro.marl import ic3net
 from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.train import state as state_lib
+from repro.serving import make_decode_step, make_prefill_step
 from repro.train import step as step_lib
 
 FL = FLGWConfig(groups=4, path="grouped")
@@ -325,7 +326,7 @@ def test_serve_step_with_cached_planstate_never_traces_make_plan(
     params, _ = transformer.lm_init(jax.random.PRNGKey(0), cfg)
     cache = transformer.init_cache(cfg, 1, 8, params=params)
     assert isinstance(cache["plans"], encoder.PlanState)
-    serve = step_lib.make_serve_step(cfg)
+    serve = make_decode_step(cfg)
     tok = jnp.zeros((1, 1), jnp.int32)
     calls = _counting_make_plan(monkeypatch)
     jax.eval_shape(serve, params, cache, tok, tok)
@@ -349,7 +350,7 @@ def test_prefill_step_encodes_once_per_layer(monkeypatch):
     cfg = _tiny_lm_cfg(flgw_targets=("mlp", "attn"), remat=False)
     params, _ = transformer.lm_init(jax.random.PRNGKey(0), cfg)
     plans = transformer.encode_plans(params, cfg)
-    prefill = step_lib.make_prefill_step(cfg)
+    prefill = make_prefill_step(cfg)
     batch = _lm_batch(cfg)
     calls = _counting_make_plan(monkeypatch)
     jax.eval_shape(prefill, params, batch)

@@ -7,6 +7,7 @@ import pytest
 
 from repro.configs import registry
 from repro.models import transformer
+from repro.serving import make_decode_step
 from repro.train import state as state_lib
 from repro.train import step as step_lib
 
@@ -97,7 +98,7 @@ def test_smoke_decode_step(arch):
     if cfg.encoder_layers:
         cache["encoder_out"] = jnp.zeros((b, cfg.num_frames, cfg.d_model),
                                          cfg.dtype)
-    serve = jax.jit(step_lib.make_serve_step(cfg))
+    serve = jax.jit(make_decode_step(cfg))
     tok = jnp.ones((b, 1), jnp.int32)
     for i in range(3):
         pos = jnp.full((b, 1), i, jnp.int32)

@@ -9,10 +9,9 @@ The API-consolidation contract this file pins:
   planless (per-call re-encode in the projections).
 * N sessions / requests against one params version cost ONE
   ``make_plan``-per-layer encode, process-wide (the plan cache).
-* ``make_serve_step`` / ``make_prefill_step`` still resolve from
-  ``repro.train.step`` but warn DeprecationWarning and behave bitwise
-  like the ``repro.serving`` factories they delegate to (the
-  ``marl/env.py`` shim pattern).
+* the PR-6 ``repro.train.step`` deprecation shims (``make_serve_step`` /
+  ``make_prefill_step``) are retired — the names must NOT resolve there
+  anymore; ``repro.serving`` is the only surface.
 """
 import warnings
 
@@ -238,28 +237,18 @@ def test_plan_cache_lru_bound(served):
     assert plan_cache.stats()["entries"] == plan_cache.MAX_ENTRIES
 
 
-# -- deprecated shims --------------------------------------------------------
+# -- retired shims -----------------------------------------------------------
 
-def test_train_step_shims_warn_and_delegate(served):
-    cfg, params = served
-    with pytest.warns(DeprecationWarning, match="repro.serving"):
-        old_serve = step_lib.make_serve_step(cfg)
-    with pytest.warns(DeprecationWarning, match="repro.serving"):
-        old_prefill = step_lib.make_prefill_step(cfg)
-
-    cache = transformer.init_cache(cfg, 1, 8, params=params)
-    tok = jnp.zeros((1, 1), jnp.int32)
-    pos = jnp.zeros((1, 1), jnp.int32)
-    got, _ = old_serve(params, cache, tok, pos)
-    want, _ = make_decode_step(cfg)(params, cache, tok, pos)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
-
-    batch = {"tokens": jnp.zeros((1, 8), jnp.int32),
-             "positions": jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32),
-                                           (1, 8))}
-    got = old_prefill(params, batch, cache["plans"])
-    want = make_prefill_step(cfg)(params, batch, cache["plans"])
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+def test_train_step_shims_are_retired():
+    """The PR-6 deprecation bridge is gone: serving factories must not
+    resolve from ``repro.train`` anymore (``repro.serving`` is the one
+    surface), and the train package must not re-export them."""
+    import repro.train as train_pkg
+    assert not hasattr(step_lib, "make_serve_step")
+    assert not hasattr(step_lib, "make_prefill_step")
+    assert not hasattr(train_pkg, "make_serve_step")
+    assert not hasattr(train_pkg, "make_prefill_step")
+    assert "make_serve_step" not in train_pkg.__all__
 
 
 def test_new_factories_do_not_warn(served):

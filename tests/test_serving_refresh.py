@@ -17,7 +17,7 @@ import pytest
 from repro.configs import registry
 from repro.core import encoder
 from repro.models import transformer
-from repro.train import step as step_lib
+from repro.serving import make_decode_step, make_prefill_step
 
 
 def _cfg():
@@ -56,7 +56,7 @@ def test_refresh_cache_plans_fires_and_matches_fresh_encode(served):
     """Params mutated between requests: the boundary hook must detect the
     moved layout and hand back exactly a fresh encode's PlanState."""
     cfg, params, cache = served
-    serve = jax.jit(step_lib.make_serve_step(cfg))
+    serve = jax.jit(make_decode_step(cfg))
     tok = jnp.zeros((1, 1), jnp.int32)
     pos = jnp.zeros((1, 1), jnp.int32)
     _, cache = serve(params, cache, tok, pos)        # request 1 decodes
@@ -108,7 +108,7 @@ def test_prefill_certifies_caller_supplied_plans(served):
     stale = cache["plans"]                 # encoded from `params`
     fresh = transformer.encode_plans(params2, cfg)
     batch = _batch(vocab=cfg.vocab)
-    prefill = step_lib.make_prefill_step(cfg)
+    prefill = make_prefill_step(cfg)
     out_certified = prefill(params2, batch, plans=stale)
     out_fresh = prefill(params2, batch, plans=fresh)
     np.testing.assert_array_equal(np.asarray(out_certified),
@@ -125,7 +125,7 @@ def test_prefill_certifies_caller_supplied_plans(served):
 
 
 def test_serve_step_refresh_plans_flag_heals_a_stale_cache(served):
-    """make_serve_step(refresh_plans=True) builds the certification into
+    """make_decode_step(certify_each_step=True) builds the certification into
     every decode step: a stale cache decodes identically to one freshly
     encoded from the updated params; the default step (trusting the
     cache) does not."""
@@ -136,7 +136,7 @@ def test_serve_step_refresh_plans_flag_heals_a_stale_cache(served):
     tok = jnp.zeros((1, 1), jnp.int32)
     pos = jnp.zeros((1, 1), jnp.int32)
 
-    healing = jax.jit(step_lib.make_serve_step(cfg, refresh_plans=True))
+    healing = jax.jit(make_decode_step(cfg, certify_each_step=True))
     t_healed, c_healed = healing(params2, stale_cache, tok, pos)
     t_fresh, c_fresh = healing(params2, fresh_cache, tok, pos)
     np.testing.assert_array_equal(np.asarray(t_healed), np.asarray(t_fresh))
@@ -145,7 +145,7 @@ def test_serve_step_refresh_plans_flag_heals_a_stale_cache(served):
                     jax.tree.leaves(c_fresh["blocks"])):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
-    trusting = jax.jit(step_lib.make_serve_step(cfg))
+    trusting = jax.jit(make_decode_step(cfg))
     stale_cache2 = transformer.init_cache(cfg, 1, 8, params=params)
     _, c_trust = trusting(params2, stale_cache2, tok, pos)
     assert int(c_trust["plans"].sig) != int(c_fresh["plans"].sig)
