@@ -68,6 +68,9 @@ def main(argv=None):
                     help="assert plan-signature consistency of every "
                          "published bundle")
     ap.add_argument("--log-every", type=int, default=0)
+    ap.add_argument("--debug-contracts", action="store_true",
+                    help="run under repro.analysis.contracts.no_retrace: "
+                         "fail if actor/learner/publish recompile mid-run")
     ap.add_argument("--distributed", action="store_true",
                     help="initialise jax.distributed for multi-host runs")
     ap.add_argument("--coordinator", default=None,
@@ -112,7 +115,8 @@ def main(argv=None):
     params, hist = async_mod.async_train(
         cfg, ecfg, tcfg, acfg, updates=args.updates, seed=args.seed,
         log_every=args.log_every or max(1, args.updates // 8), env=env,
-        threads=args.threads, check_publication=args.check_publication)
+        threads=args.threads, check_publication=args.check_publication,
+        debug_contracts=args.debug_contracts)
 
     succ = np.array([h["success"] for h in hist])
     stale = np.array([h["staleness"] for h in hist])

@@ -56,6 +56,9 @@ def main(argv=None):
                          "(default 4x batch)")
     ap.add_argument("--p-arrive", type=float, default=0.5,
                     help="continuous mode: Geometric arrival probability")
+    ap.add_argument("--debug-contracts", action="store_true",
+                    help="run under repro.analysis.contracts.no_retrace: "
+                         "fail if any jitted step recompiles mid-run")
     args = ap.parse_args(argv)
 
     overrides = {}
@@ -66,7 +69,8 @@ def main(argv=None):
     key = jax.random.PRNGKey(0)
     params, _ = transformer.lm_init(key, cfg)
 
-    session = ServeSession(cfg, params, plan_policy=args.plan_policy)
+    session = ServeSession(cfg, params, plan_policy=args.plan_policy,
+                           debug_contracts=args.debug_contracts)
     if isinstance(session.plans, encoder.PlanState):
         n_plans = sum(1 for _ in encoder.iter_flgw_layers(params))
         print(f"serving plan-aware: PlanState with {n_plans} cached "

@@ -1,0 +1,48 @@
+"""Static analysis + runtime trace/compile contracts for the repo.
+
+Two layers keep the "sparse handling stays exact, hot loop stays
+compiled" property mechanical instead of per-test manual:
+
+* :mod:`repro.analysis.lint` — an AST linter with repo-specific rules
+  (ANL001..ANL005): module-level ``jax``/``jnp`` array construction in
+  importable modules, host-sync idioms inside jitted step factories and
+  hot loops, Pallas ``pallas_call`` structural consistency, undeclared
+  ``custom_vjp`` static args, and visibly mismatched ``lax.scan``
+  carries. Run as ``python -m repro.analysis.lint src tests benchmarks
+  examples [--check]``.
+* :mod:`repro.analysis.contracts` — runtime contracts: ``trace_counter``
+  (the one replacement for the monkeypatched ``make_plan`` counting
+  idiom), ``assert_max_traces`` and ``no_retrace`` (a
+  ``jax.log_compiles``-based recompile guard, surfaced as the opt-in
+  ``debug_contracts=True`` hook on ``ServeSession`` / ``Engine`` /
+  ``async_train``).
+"""
+__all__ = [
+    "ContractViolation", "RetraceError", "assert_max_traces",
+    "no_retrace", "trace_counter", "Finding", "lint_file", "lint_paths",
+    "contracts", "lint",
+]
+
+_EXPORTS = {
+    "ContractViolation": "contracts", "RetraceError": "contracts",
+    "assert_max_traces": "contracts", "no_retrace": "contracts",
+    "trace_counter": "contracts",
+    "Finding": "lint", "lint_file": "lint", "lint_paths": "lint",
+}
+
+
+def __getattr__(name):
+    # everything resolves lazily: the lint CLI (`python -m
+    # repro.analysis.lint`) must not pull in contracts' jax import (the
+    # CI analysis job runs without jax installed), and an eager lint
+    # import here would load the submodule twice under runpy (the
+    # "found in sys.modules" RuntimeWarning)
+    import importlib
+    if name in ("contracts", "lint"):
+        return importlib.import_module(f"repro.analysis.{name}")
+    mod = _EXPORTS.get(name)
+    if mod is not None:
+        return getattr(
+            importlib.import_module(f"repro.analysis.{mod}"), name)
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,891 @@
+"""AST lint pass with repo-specific JAX/Pallas rules.
+
+Run over source roots (``python -m repro.analysis.lint src tests
+benchmarks examples``); ``--check`` gates CI against the committed
+baseline (``analysis_baseline.txt``). Rules:
+
+=======  ====================================================================
+code     what it catches
+=======  ====================================================================
+ANL001   Module-level ``jax.*``/``jnp.*`` array construction in an
+         importable module (sibling ``__init__.py``). Building a device
+         array at import time commits the runtime to a backend before
+         ``jax.distributed.initialize`` can run — the PR-8 lockout class
+         (module constants in the MARL envs blocked multi-host bring-up).
+ANL002   Host-device sync idioms (``float()``/``int()``/``bool()`` on
+         array-like values, ``.item()``, ``np.asarray``/``np.array``,
+         ``jax.device_get``) inside a traced context — a jit/pmap-decorated
+         function, a function handed to ``jax.jit``/``lax.scan``/
+         ``lax.while_loop``/…, or a step function defined inside a
+         ``make_*`` factory — and, second form, per-iteration host
+         materialization inside a loop that drives a jitted step (the
+         serving tick loop / learner loop), where results should be
+         fetched once per window. Loops that call ``block_until_ready``
+         are exempt (explicit timing loops).
+ANL003   ``pl.pallas_call`` structural inconsistencies that the runtime
+         only reports as opaque Mosaic errors (or silently miscompiles in
+         interpret mode): BlockSpec index_map arity != grid arity,
+         index_map return length != block-shape rank, out_specs rank !=
+         out_shape rank, operand count != len(in_specs), scratch dims not
+         drawn from any block shape, and ``interpret=`` flags that are
+         computed values rather than Python bools (a traced interpret
+         flag retraces the kernel every call).
+ANL004   ``jax.custom_vjp`` declarations whose static args aren't
+         declared: bool/str-defaulted or bool/str-annotated positional
+         params missing from ``nondiff_argnums``, out-of-range
+         ``nondiff_argnums`` indices, keyword-only params (unsupported by
+         custom_vjp), and a custom_vjp primal with no ``defvjp``
+         registration in the module.
+ANL005   ``lax.scan`` bodies whose carry structure visibly differs
+         between input and output (unpack length vs returned tuple
+         length vs init literal length), or that don't return a
+         ``(carry, ys)`` pair — the runtime error is a deeply-nested
+         pytree mismatch; the lint points at the body.
+=======  ====================================================================
+
+Suppression: trailing ``# noqa: ANL003`` on the offending line (comma
+lists and bare ``# noqa`` both work). Accepted findings live in the
+baseline file — one ``path|code|stripped source line`` entry per finding,
+``#``-comments for justification — so ``--check`` stays green while the
+finding stays visible. ``--write-baseline`` emits the current findings in
+baseline format.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import re
+import sys
+from collections import Counter
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = ["RULES", "Finding", "lint_source", "lint_file", "lint_paths",
+           "load_baseline", "format_baseline_entry", "main"]
+
+RULES = {
+    "ANL001": "module-level jax/jnp array construction in an importable "
+              "module (locks out jax.distributed.initialize)",
+    "ANL002": "host-device sync inside a traced context or a "
+              "jitted-step hot loop",
+    "ANL003": "pallas_call structural inconsistency",
+    "ANL004": "custom_vjp static/nondiff declaration problem",
+    "ANL005": "lax.scan carry structure mismatch",
+}
+
+# the positive lint fixtures deliberately violate the rules; keep the
+# repo-wide run (and CI --check) out of the linter's own test corpus
+DEFAULT_EXCLUDES = (os.path.join("tests", "fixtures", "lint"),)
+
+_NOQA_RE = re.compile(
+    r"#\s*noqa(?::\s*(?P<codes>[A-Z]+[0-9]+(?:\s*,\s*[A-Z]+[0-9]+)*))?",
+    re.IGNORECASE)
+
+# jnp constructors that materialize a device array at call time
+_ARRAY_CTORS = {
+    "array", "asarray", "zeros", "ones", "full", "empty", "arange",
+    "linspace", "logspace", "eye", "identity", "tri", "diag",
+    "zeros_like", "ones_like", "full_like", "empty_like", "meshgrid",
+}
+# jax-level calls that commit the process to a backend at import time
+_BACKEND_CALLS = {
+    "jax.device_put", "jax.devices", "jax.local_devices",
+    "jax.device_count", "jax.local_device_count", "jax.default_backend",
+}
+
+# calls whose function-valued arguments run under trace
+_TRACER_CONSUMERS = {
+    "jax.jit", "jax.pmap", "jax.vmap", "jax.grad", "jax.value_and_grad",
+    "jax.checkpoint", "jax.remat", "jax.lax.scan", "jax.lax.cond",
+    "jax.lax.while_loop", "jax.lax.fori_loop", "jax.lax.map",
+    "jax.lax.switch", "jax.lax.associative_scan",
+}
+
+_SYNC_CALLS = {"numpy.asarray", "numpy.array", "jax.device_get"}
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+    source: str = ""          # stripped source line (baseline fingerprint)
+
+    def baseline_key(self) -> Tuple[str, str, str]:
+        return (self.path.replace(os.sep, "/"), self.code, self.source)
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col + 1}: {self.code} "
+                f"{self.message}")
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+def _attach_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._anl_parent = node  # type: ignore[attr-defined]
+
+
+def _collect_aliases(tree: ast.AST) -> Dict[str, str]:
+    """Local name -> fully dotted module path, for every import."""
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def _qual(node: ast.AST, aliases: Dict[str, str]) -> Optional[str]:
+    """Dotted path of a Name/Attribute chain with import aliases resolved
+    (``jnp.zeros`` -> ``jax.numpy.zeros``); None for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    root = aliases.get(node.id, node.id)
+    parts.append(root)
+    return ".".join(reversed(parts))
+
+
+def _walk_skipping_defs(node: ast.AST) -> Iterable[ast.AST]:
+    """Walk expressions reachable at this node's own execution time —
+    nested function/lambda bodies run later, so they are skipped."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(n))
+
+
+def _contains_attr(node: ast.AST, names: Set[str]) -> bool:
+    return any(isinstance(n, ast.Attribute) and n.attr in names
+               for n in ast.walk(node))
+
+
+def _tuple_len(node: ast.AST) -> Optional[int]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    return None
+
+
+def _unparse(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:
+        return ast.dump(node)
+
+
+class _FileLinter:
+    def __init__(self, path: str, src: str, tree: ast.Module,
+                 importable: bool, select: Optional[Set[str]]):
+        self.path = path
+        self.src_lines = src.splitlines()
+        self.tree = tree
+        self.importable = importable
+        self.select = select
+        self.aliases = _collect_aliases(tree)
+        self.findings: List[Finding] = []
+        self.defs_by_name: Dict[str, List[ast.FunctionDef]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs_by_name.setdefault(node.name, []).append(node)
+
+    # -- plumbing -----------------------------------------------------------
+
+    def qual(self, node: ast.AST) -> Optional[str]:
+        return _qual(node, self.aliases)
+
+    def report(self, node: ast.AST, code: str, message: str) -> None:
+        if self.select and code not in self.select:
+            return
+        line = getattr(node, "lineno", 1)
+        src = (self.src_lines[line - 1].strip()
+               if 0 < line <= len(self.src_lines) else "")
+        m = _NOQA_RE.search(self.src_lines[line - 1]) \
+            if 0 < line <= len(self.src_lines) else None
+        if m:
+            codes = m.group("codes")
+            if codes is None or code in {c.strip().upper()
+                                         for c in codes.split(",")}:
+                return
+        f = Finding(self.path, line, getattr(node, "col_offset", 0),
+                    code, message, src)
+        if f not in self.findings:
+            self.findings.append(f)
+
+    def run(self) -> List[Finding]:
+        self.anl001()
+        self.anl002()
+        self.anl003()
+        self.anl004()
+        self.anl005()
+        self.findings.sort(key=lambda f: (f.line, f.col, f.code))
+        return self.findings
+
+    # -- ANL001: import-time device-array construction ----------------------
+
+    def anl001(self) -> None:
+        if not self.importable:
+            return
+        # statements executed at import: module body, plus conditional /
+        # class bodies at module level (functions run later)
+        stack: List[ast.AST] = [self.tree]
+        while stack:
+            scope = stack.pop()
+            for stmt in getattr(scope, "body", []) + \
+                    getattr(scope, "orelse", []) + \
+                    getattr(scope, "finalbody", []):
+                if isinstance(stmt, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    continue
+                if isinstance(stmt, (ast.If, ast.Try, ast.With,
+                                     ast.ClassDef, ast.For, ast.While)):
+                    stack.append(stmt)
+                    continue
+                for node in _walk_skipping_defs(stmt):
+                    if isinstance(node, ast.Call):
+                        self._check_import_time_call(node)
+        for handler in [n for n in ast.walk(self.tree)
+                        if isinstance(n, ast.ExceptHandler)
+                        and self._at_module_level(n)]:
+            for stmt in handler.body:
+                for node in _walk_skipping_defs(stmt):
+                    if isinstance(node, ast.Call):
+                        self._check_import_time_call(node)
+
+    def _at_module_level(self, node: ast.AST) -> bool:
+        p = getattr(node, "_anl_parent", None)
+        while p is not None:
+            if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+                return False
+            p = getattr(p, "_anl_parent", None)
+        return True
+
+    def _check_import_time_call(self, node: ast.Call) -> None:
+        q = self.qual(node.func)
+        if q is None:
+            return
+        hit = (
+            (q.startswith("jax.numpy.")
+             and q.rsplit(".", 1)[1] in _ARRAY_CTORS)
+            or q.startswith("jax.random.")
+            or q in _BACKEND_CALLS
+        )
+        if hit:
+            self.report(
+                node, "ANL001",
+                f"`{_unparse(node.func)}(...)` at import time builds a "
+                f"device array / commits a backend before "
+                f"jax.distributed.initialize can run; build it lazily or "
+                f"use numpy for module constants")
+
+    # -- ANL002: host syncs in traced contexts and hot loops ----------------
+
+    def _jit_contexts(self) -> List[ast.AST]:
+        ctxs: List[ast.AST] = []
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if self._has_jit_decorator(node):
+                    ctxs.append(node)
+                    continue
+                # a step function defined inside a make_* factory
+                p = getattr(node, "_anl_parent", None)
+                while p is not None:
+                    if isinstance(p, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)) \
+                            and p.name.startswith("make_"):
+                        ctxs.append(node)
+                        break
+                    p = getattr(p, "_anl_parent", None)
+            elif isinstance(node, ast.Call):
+                q = self.qual(node.func)
+                if q in _TRACER_CONSUMERS:
+                    for arg in node.args:
+                        if isinstance(arg, ast.Lambda):
+                            ctxs.append(arg)
+                        elif isinstance(arg, ast.Name):
+                            ctxs.extend(self.defs_by_name.get(arg.id, []))
+        return ctxs
+
+    def _has_jit_decorator(self, node) -> bool:
+        for dec in node.decorator_list:
+            q = self.qual(dec) if not isinstance(dec, ast.Call) \
+                else self.qual(dec.func)
+            if q in ("jax.jit", "jax.pmap", "jax.vmap"):
+                return True
+            if isinstance(dec, ast.Call) \
+                    and q in ("functools.partial", "partial") and dec.args:
+                inner = self.qual(dec.args[0])
+                if inner in ("jax.jit", "jax.pmap", "jax.vmap"):
+                    return True
+        return False
+
+    def _jitted_callable_names(self) -> Tuple[Set[str], Set[str]]:
+        """Names / attribute names statically bound to ``jax.jit(...)``."""
+        names: Set[str] = set()
+        attrs: Set[str] = set()
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                           ast.Call):
+                q = self.qual(node.value.func)
+                if q in ("jax.jit", "jax.pmap"):
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name):
+                            names.add(tgt.id)
+                        elif isinstance(tgt, ast.Attribute):
+                            attrs.add(tgt.attr)
+        return names, attrs
+
+    def _sync_call_kind(self, node: ast.Call,
+                        hot_loop: bool) -> Optional[str]:
+        q = self.qual(node.func)
+        if q in _SYNC_CALLS:
+            return _unparse(node.func)
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "item" and not node.args:
+            return ".item()"
+        if isinstance(node.func, ast.Name) \
+                and node.func.id in ("float", "int", "bool") \
+                and len(node.args) == 1:
+            if hot_loop and node.func.id != "float":
+                return None          # int()/bool() too noisy on host loops
+            arg = node.args[0]
+            # bare names, attributes, literals and arithmetic are far
+            # more often static scalars (shapes, config) than device
+            # values; only a Call or Subscript argument reliably smells
+            # like an array being pulled to host
+            if isinstance(arg, (ast.Call, ast.Subscript)):
+                if _contains_attr(arg, {"shape", "ndim", "size", "dtype"}):
+                    return None      # static shape arithmetic is fine
+                if isinstance(arg, ast.Call) \
+                        and isinstance(arg.func, ast.Name) \
+                        and arg.func.id == "len":
+                    return None
+                return f"{node.func.id}()"
+        return None
+
+    def anl002(self) -> None:
+        seen: Set[int] = set()
+        for ctx in self._jit_contexts():
+            if id(ctx) in seen:
+                continue
+            seen.add(id(ctx))
+            body = ctx.body if isinstance(ctx.body, list) else [ctx.body]
+            for stmt in body:
+                for node in ast.walk(stmt):
+                    if isinstance(node, ast.Call):
+                        kind = self._sync_call_kind(node, hot_loop=False)
+                        if kind:
+                            name = getattr(ctx, "name", "<lambda>")
+                            self.report(
+                                node, "ANL002",
+                                f"`{kind}` forces a host-device sync "
+                                f"inside traced context `{name}` — it "
+                                f"fails under jit and devalues the "
+                                f"compiled hot path; keep values on "
+                                f"device or move the fetch outside the "
+                                f"traced step")
+        # hot loops: a loop that drives a jitted step and materializes
+        # per iteration
+        jit_names, jit_attrs = self._jitted_callable_names()
+        step_attrs = jit_attrs | {"decode", "prefill"}
+        for loop in [n for n in ast.walk(self.tree)
+                     if isinstance(n, (ast.For, ast.While))]:
+            body_nodes = [n for stmt in loop.body
+                          for n in _walk_skipping_defs(stmt)] + loop.body
+            calls = [n for n in body_nodes if isinstance(n, ast.Call)]
+            if any(isinstance(c.func, ast.Attribute)
+                   and c.func.attr == "block_until_ready" for c in calls):
+                continue             # explicit timing loop
+            drives_jit = any(
+                (isinstance(c.func, ast.Attribute)
+                 and (c.func.attr in step_attrs
+                      or c.func.attr.startswith("_jit")))
+                or (isinstance(c.func, ast.Name)
+                    and (c.func.id in jit_names
+                         or c.func.id.startswith("jit_")))
+                for c in calls)
+            if not drives_jit:
+                continue
+            for c in calls:
+                kind = self._sync_call_kind(c, hot_loop=True)
+                if kind:
+                    self.report(
+                        c, "ANL002",
+                        f"`{kind}` materializes device values on every "
+                        f"iteration of a loop driving a jitted step — "
+                        f"fetch once per window (stack on device, one "
+                        f"np.asarray/device_get at the boundary)")
+
+    # -- ANL003: pallas_call structure --------------------------------------
+
+    def _block_spec_parts(self, call: ast.Call):
+        """(block_shape_tuple, index_map_lambda) of a BlockSpec call."""
+        shape = imap = None
+        args = list(call.args)
+        if args and isinstance(args[0], (ast.Tuple, ast.List)):
+            shape = args[0]
+        if len(args) > 1 and isinstance(args[1], ast.Lambda):
+            imap = args[1]
+        for kw in call.keywords:
+            if kw.arg == "block_shape" \
+                    and isinstance(kw.value, (ast.Tuple, ast.List)):
+                shape = kw.value
+            if kw.arg == "index_map" and isinstance(kw.value, ast.Lambda):
+                imap = kw.value
+        return shape, imap
+
+    def anl003(self) -> None:
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            q = self.qual(node.func)
+            if q is None or not q.endswith("pallas_call") \
+                    or "pallas" not in q:
+                continue
+            kw = {k.arg: k.value for k in node.keywords if k.arg}
+            grid_n = _tuple_len(kw.get("grid")) if "grid" in kw else None
+            specs: List[Tuple[ast.Call, str]] = []
+            in_specs = kw.get("in_specs")
+            n_in_specs = None
+            if isinstance(in_specs, (ast.List, ast.Tuple)):
+                n_in_specs = len(in_specs.elts)
+                specs += [(e, "in_specs") for e in in_specs.elts
+                          if isinstance(e, ast.Call)]
+            out_specs = kw.get("out_specs")
+            if isinstance(out_specs, ast.Call):
+                specs.append((out_specs, "out_specs"))
+            elif isinstance(out_specs, (ast.List, ast.Tuple)):
+                specs += [(e, "out_specs") for e in out_specs.elts
+                          if isinstance(e, ast.Call)]
+
+            block_dim_exprs: Set[str] = set()
+            out_block_rank = None
+            for spec, role in specs:
+                shape, imap = self._block_spec_parts(spec)
+                if shape is not None:
+                    block_dim_exprs |= {_unparse(d) for d in shape.elts}
+                if imap is not None and grid_n is not None:
+                    # defaulted params are the closure-capture idiom
+                    # (lambda b, h, i, j, qpk=qpk: ...), not grid indices
+                    arity = (len(imap.args.args)
+                             - len(imap.args.defaults))
+                    if arity != grid_n:
+                        self.report(
+                            spec, "ANL003",
+                            f"{role} index_map takes {arity} grid "
+                            f"indices but the grid has {grid_n} "
+                            f"dimensions")
+                if imap is not None and shape is not None:
+                    ret_n = _tuple_len(imap.body)
+                    if ret_n is not None and ret_n != len(shape.elts):
+                        self.report(
+                            spec, "ANL003",
+                            f"{role} index_map returns {ret_n} block "
+                            f"indices for a rank-{len(shape.elts)} "
+                            f"block shape")
+                if role == "out_specs" and shape is not None:
+                    out_block_rank = len(shape.elts)
+
+            out_shape = kw.get("out_shape")
+            if isinstance(out_shape, ast.Call) \
+                    and (self.qual(out_shape.func) or "").endswith(
+                        "ShapeDtypeStruct") \
+                    and out_shape.args:
+                rank = _tuple_len(out_shape.args[0])
+                if rank is not None and out_block_rank is not None \
+                        and rank != out_block_rank:
+                    self.report(
+                        out_shape, "ANL003",
+                        f"out_specs block shape is rank {out_block_rank} "
+                        f"but out_shape is rank {rank}")
+
+            parent = getattr(node, "_anl_parent", None)
+            if isinstance(parent, ast.Call) and parent.func is node \
+                    and n_in_specs is not None \
+                    and not any(isinstance(a, ast.Starred)
+                                for a in parent.args) \
+                    and len(parent.args) != n_in_specs:
+                self.report(
+                    parent, "ANL003",
+                    f"pallas_call declares {n_in_specs} in_specs but is "
+                    f"applied to {len(parent.args)} operands")
+
+            scratch = kw.get("scratch_shapes")
+            if isinstance(scratch, (ast.List, ast.Tuple)) \
+                    and block_dim_exprs:
+                for entry in scratch.elts:
+                    if not (isinstance(entry, ast.Call) and entry.args
+                            and isinstance(entry.args[0],
+                                           (ast.Tuple, ast.List))):
+                        continue
+                    sq = self.qual(entry.func) or ""
+                    if not sq.endswith((".VMEM", ".SMEM")):
+                        continue
+                    for dim in entry.args[0].elts:
+                        du = _unparse(dim)
+                        if du in block_dim_exprs:
+                            continue
+                        if isinstance(dim, ast.Constant) \
+                                and dim.value == 1:
+                            continue
+                        self.report(
+                            entry, "ANL003",
+                            f"scratch dim `{du}` is not drawn from any "
+                            f"BlockSpec block shape — scratch tiles must "
+                            f"stay consistent with the block tiling")
+
+            interp = kw.get("interpret")
+            if interp is not None and not isinstance(
+                    interp, (ast.Constant, ast.Name, ast.Attribute)):
+                bad = isinstance(interp, ast.Call) or any(
+                    (q2 := _qual(n2, self.aliases)) is not None
+                    and q2.startswith(("jax.", "jax.numpy."))
+                    for n2 in ast.walk(interp)
+                    if isinstance(n2, (ast.Name, ast.Attribute)))
+                if bad:
+                    self.report(
+                        interp, "ANL003",
+                        "interpret= must be a Python bool, never a "
+                        "computed/traced value — a traced flag makes the "
+                        "kernel retrace per call")
+            if isinstance(interp, ast.Constant) \
+                    and not isinstance(interp.value, bool):
+                self.report(interp, "ANL003",
+                            "interpret= must be a Python bool")
+
+    # -- ANL004: custom_vjp declarations ------------------------------------
+
+    def _custom_vjp_decoration(self, node):
+        """(is_custom_vjp, nondiff_tuple_or_None) for a FunctionDef."""
+        for dec in node.decorator_list:
+            if self.qual(dec) == "jax.custom_vjp":
+                return True, ()
+            if isinstance(dec, ast.Call):
+                q = self.qual(dec.func)
+                if q == "jax.custom_vjp":
+                    nd = self._nondiff_from_kw(dec.keywords)
+                    return True, nd
+                if q in ("functools.partial", "partial") and dec.args \
+                        and self.qual(dec.args[0]) == "jax.custom_vjp":
+                    nd = self._nondiff_from_kw(dec.keywords)
+                    return True, nd
+        return False, None
+
+    @staticmethod
+    def _nondiff_from_kw(keywords):
+        for kw in keywords:
+            if kw.arg == "nondiff_argnums":
+                if isinstance(kw.value, (ast.Tuple, ast.List)):
+                    vals = [e.value for e in kw.value.elts
+                            if isinstance(e, ast.Constant)]
+                    return tuple(vals)
+                if isinstance(kw.value, ast.Constant):
+                    return (kw.value.value,)
+                return None          # dynamic — can't check
+        return ()
+
+    def anl004(self) -> None:
+        defvjp_names = {
+            n.func.value.id
+            for n in ast.walk(self.tree)
+            if isinstance(n, ast.Call)
+            and isinstance(n.func, ast.Attribute)
+            and n.func.attr == "defvjp"
+            and isinstance(n.func.value, ast.Name)}
+        for node in ast.walk(self.tree):
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            is_cvjp, nondiff = self._custom_vjp_decoration(node)
+            if not is_cvjp:
+                continue
+            pos = list(node.args.posonlyargs) + list(node.args.args)
+            if nondiff is not None:
+                for idx in nondiff:
+                    if isinstance(idx, int) and idx >= len(pos):
+                        self.report(
+                            node, "ANL004",
+                            f"nondiff_argnums index {idx} is out of "
+                            f"range for `{node.name}` "
+                            f"({len(pos)} positional params)")
+            declared = set(i for i in (nondiff or ())
+                           if isinstance(i, int))
+            defaults = node.args.defaults
+            offset = len(pos) - len(defaults)
+            for i, p in enumerate(pos):
+                static = False
+                d = defaults[i - offset] if i >= offset else None
+                if isinstance(d, ast.Constant) \
+                        and isinstance(d.value, (bool, str)):
+                    static = True
+                ann = p.annotation
+                if isinstance(ann, ast.Name) and ann.id in ("bool", "str"):
+                    static = True
+                if static and i not in declared:
+                    self.report(
+                        node, "ANL004",
+                        f"param `{p.arg}` of custom_vjp `{node.name}` "
+                        f"looks static (bool/str) but index {i} is not "
+                        f"in nondiff_argnums — it will be traced and "
+                        f"break the VJP")
+            if node.args.kwonlyargs:
+                self.report(
+                    node, "ANL004",
+                    f"custom_vjp `{node.name}` has keyword-only params — "
+                    f"custom_vjp does not support kwargs; make them "
+                    f"positional and declare them in nondiff_argnums")
+            if node.name not in defvjp_names:
+                self.report(
+                    node, "ANL004",
+                    f"custom_vjp `{node.name}` has no "
+                    f"`{node.name}.defvjp(...)` registration in this "
+                    f"module — calling its grad will fail at runtime")
+
+    # -- ANL005: scan carry structure ---------------------------------------
+
+    def anl005(self) -> None:
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if self.qual(node.func) != "jax.lax.scan" or not node.args:
+                continue
+            body = node.args[0]
+            init_len = (_tuple_len(node.args[1])
+                        if len(node.args) > 1 else None)
+            if isinstance(body, ast.Lambda):
+                ret = body.body
+                self._check_scan_return(node, ret, None, init_len,
+                                        "<lambda>")
+            elif isinstance(body, ast.Name):
+                for fn in self.defs_by_name.get(body.id, []):
+                    self._check_scan_body(node, fn, init_len)
+
+    def _check_scan_body(self, call, fn, init_len):
+        carry_param = None
+        params = list(fn.args.posonlyargs) + list(fn.args.args)
+        if params:
+            carry_param = params[0].arg
+        in_len = None
+        for stmt in fn.body:
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Tuple) \
+                    and isinstance(stmt.value, ast.Name) \
+                    and stmt.value.id == carry_param:
+                in_len = len(stmt.targets[0].elts)
+                break
+        for stmt in ast.walk(fn):
+            if isinstance(stmt, ast.Return) and stmt.value is not None:
+                self._check_scan_return(stmt, stmt.value, in_len,
+                                        init_len, fn.name)
+
+    def _check_scan_return(self, node, ret, in_len, init_len, name):
+        n = _tuple_len(ret)
+        if n is not None and n != 2:
+            self.report(
+                node, "ANL005",
+                f"scan body `{name}` returns a {n}-tuple — lax.scan "
+                f"bodies must return a (carry, ys) pair")
+            return
+        out_len = (_tuple_len(ret.elts[0])
+                   if isinstance(ret, (ast.Tuple, ast.List)) else None)
+        if out_len is None:
+            return
+        if in_len is not None and out_len != in_len:
+            self.report(
+                node, "ANL005",
+                f"scan body `{name}` unpacks a {in_len}-element carry "
+                f"but returns a {out_len}-element carry — the in/out "
+                f"carry pytrees must match")
+        if init_len is not None and out_len != init_len:
+            self.report(
+                node, "ANL005",
+                f"scan init is a {init_len}-element tuple but body "
+                f"`{name}` returns a {out_len}-element carry")
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def lint_source(src: str, path: str = "<string>", *,
+                importable: bool = False,
+                select: Optional[Iterable[str]] = None) -> List[Finding]:
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Finding(path, e.lineno or 1, (e.offset or 1) - 1,
+                        "ANL000", f"syntax error: {e.msg}")]
+    _attach_parents(tree)
+    sel = {s.upper() for s in select} if select else None
+    return _FileLinter(path, src, tree, importable, sel).run()
+
+
+def _is_importable(path: str) -> bool:
+    return os.path.exists(os.path.join(os.path.dirname(os.path.abspath(
+        path)), "__init__.py"))
+
+
+def lint_file(path: str, *, select: Optional[Iterable[str]] = None,
+              importable: Optional[bool] = None) -> List[Finding]:
+    with open(path, "r", encoding="utf-8") as f:
+        src = f.read()
+    if importable is None:
+        importable = _is_importable(path)
+    return lint_source(src, path, importable=importable, select=select)
+
+
+def _iter_py_files(roots: Sequence[str],
+                   excludes: Sequence[str]) -> Iterable[str]:
+    def excluded(p: str) -> bool:
+        norm = p.replace(os.sep, "/")
+        return any(x.replace(os.sep, "/") in norm for x in excludes)
+
+    for root in roots:
+        if os.path.isfile(root):
+            if root.endswith(".py") and not excluded(root):
+                yield root
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d != "__pycache__")
+            for fn in sorted(filenames):
+                p = os.path.join(dirpath, fn)
+                if fn.endswith(".py") and not excluded(p):
+                    yield p
+
+
+def lint_paths(roots: Sequence[str], *,
+               select: Optional[Iterable[str]] = None,
+               excludes: Sequence[str] = DEFAULT_EXCLUDES
+               ) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in _iter_py_files(roots, excludes):
+        findings.extend(lint_file(path, select=select))
+    return findings
+
+
+# -- baseline ----------------------------------------------------------------
+
+def format_baseline_entry(f: Finding) -> str:
+    path, code, src = f.baseline_key()
+    return f"{path}|{code}|{src}"
+
+
+def load_baseline(path: str) -> Counter:
+    entries: Counter = Counter()
+    if not os.path.exists(path):
+        return entries
+    with open(path, "r", encoding="utf-8") as fh:
+        for raw in fh:
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            parts = line.split("|", 2)
+            if len(parts) == 3:
+                entries[(parts[0], parts[1], parts[2])] += 1
+    return entries
+
+
+def apply_baseline(findings: List[Finding],
+                   baseline: Counter) -> Tuple[List[Finding], List[Finding]]:
+    """-> (new findings, baselined findings). Each baseline entry absorbs
+    as many findings as it has copies."""
+    budget = Counter(baseline)
+    new: List[Finding] = []
+    old: List[Finding] = []
+    for f in findings:
+        k = f.baseline_key()
+        if budget[k] > 0:
+            budget[k] -= 1
+            old.append(f)
+        else:
+            new.append(f)
+    return new, old
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Repo-specific JAX/Pallas lint pass (rules "
+                    "ANL001..ANL005; see module docstring).")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directory roots to lint")
+    ap.add_argument("--check", action="store_true",
+                    help="CI mode: terse output, exit 1 on any finding "
+                         "not covered by the baseline")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule codes to run "
+                         "(default: all)")
+    ap.add_argument("--baseline", default="analysis_baseline.txt",
+                    help="baseline file of accepted findings "
+                         "(default: analysis_baseline.txt)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline file")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write all current findings to the baseline "
+                         "file and exit 0")
+    ap.add_argument("--no-default-excludes", action="store_true",
+                    help="also lint the linter's own positive fixtures "
+                         f"(default excludes: {DEFAULT_EXCLUDES})")
+    args = ap.parse_args(argv)
+
+    select = (args.select.split(",") if args.select else None)
+    excludes = () if args.no_default_excludes else DEFAULT_EXCLUDES
+    findings = lint_paths(args.paths, select=select, excludes=excludes)
+
+    if args.write_baseline:
+        with open(args.baseline, "w", encoding="utf-8") as fh:
+            fh.write("# repro.analysis.lint baseline — accepted findings"
+                     "\n# format: path|rule|stripped source line\n"
+                     "# add a trailing '# why: ...' comment line above "
+                     "each entry to justify it\n")
+            for f in findings:
+                fh.write(format_baseline_entry(f) + "\n")
+        print(f"wrote {len(findings)} baseline entrie(s) to "
+              f"{args.baseline}")
+        return 0
+
+    baseline = (Counter() if args.no_baseline
+                else load_baseline(args.baseline))
+    new, old = apply_baseline(findings, baseline)
+
+    if not args.check:
+        for f in new:
+            print(f.render())
+        for f in old:
+            print(f"{f.render()}  [baselined]")
+    elif new:
+        for f in new:
+            print(f.render())
+    counts = Counter(f.code for f in new)
+    summary = ", ".join(f"{c}: {n}" for c, n in sorted(counts.items()))
+    if new:
+        print(f"{len(new)} finding(s) not in baseline"
+              + (f" ({summary})" if summary else "")
+              + (f"; {len(old)} baselined" if old else ""))
+        return 1
+    print(f"clean: 0 new finding(s)"
+          + (f", {len(old)} baselined" if old else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -98,7 +98,7 @@ def train_lm(arch: str, *, smoke: bool = True, steps: int = 20,
                 history.append(metrics)
                 if log_every and end % log_every == 0:
                     print(f"step {end}: loss="
-                          f"{float(metrics['loss']):.4f}", flush=True)
+                          f"{float(metrics['loss']):.4f}", flush=True)  # noqa: ANL002 — log_every-gated print; fetch is the point
         dt = time.time() - t0
 
     losses = [float(h["loss"]) for h in history]

@@ -476,7 +476,8 @@ def async_train(cfg: ic3net.IC3NetConfig, ecfg=None,
                 seed: int = 0, log_every: int = 0,
                 env: str | envs_mod.Env = "predator_prey",
                 schedule=None, threads: bool = False,
-                check_publication: bool = False):
+                check_publication: bool = False,
+                debug_contracts: bool = False):
     """Run the decoupled pipeline for ``updates`` learner steps.
 
     Returns ``(params, history)`` like :func:`train.train`; each history
@@ -495,7 +496,22 @@ def async_train(cfg: ic3net.IC3NetConfig, ecfg=None,
     feature — the published snapshot would need a per-version ramp state
     — and is rejected here; run the warmup synchronously, then hand the
     params to the async pipeline.
+
+    ``debug_contracts=True`` runs the whole pipeline under
+    :func:`repro.analysis.contracts.no_retrace`: the actor rollout,
+    learner update and publication step may each compile once; any
+    mid-run recompile (shape instability, a traced flag) raises
+    :class:`~repro.analysis.contracts.RetraceError` — on either thread,
+    since jax's compile log is process-global.
     """
+    if debug_contracts:
+        from repro.analysis import contracts
+        with contracts.no_retrace(label="async_train"):
+            return async_train(
+                cfg, ecfg, tcfg, acfg, updates=updates, seed=seed,
+                log_every=log_every, env=env, schedule=schedule,
+                threads=threads, check_publication=check_publication,
+                debug_contracts=False)
     if isinstance(env, str):
         env = envs_mod.get(env)
     if ecfg is None:
@@ -521,6 +537,19 @@ def async_train(cfg: ic3net.IC3NetConfig, ecfg=None,
     queue = QueueDriver(acfg.capacity, example, acfg.push_policy)
 
     history: list[dict] = []
+    pending: list = []    # (device metrics, staleness, depth) per update
+
+    def flush_history():
+        """Materialize every pending update's metrics in one host fetch
+        (the marl scan's once-per-window discipline — the learner loop
+        itself never blocks on metric values)."""
+        if pending:
+            fetched = jax.device_get([m for m, _, _ in pending])  # 1 sync
+            for host_m, (_, stale, depth) in zip(fetched, pending):
+                history.append(
+                    _history_entry(host_m, staleness=stale, depth=depth))
+            pending.clear()
+
     env_steps_window = tcfg.batch * ecfg.max_steps
     produced = {"windows": 0}
     stop = threading.Event()
@@ -594,9 +623,9 @@ def async_train(cfg: ic3net.IC3NetConfig, ecfg=None,
                     assert bool(bundle_consistent(bundle)), \
                         "published params/PlanState signature mismatch " \
                         f"at version {version}"
-            history.append(_history_entry(
-                metrics, staleness=version - 1 - ver, depth=len(queue)))
+            pending.append((metrics, version - 1 - ver, len(queue)))
             if log_every and it % log_every == 0:
+                flush_history()    # log boundary: one batched fetch
                 print(f"update {it:5d} success "
                       f"{history[-1]['success']:.3f} return "
                       f"{history[-1]['return']:.3f} staleness "
@@ -605,6 +634,7 @@ def async_train(cfg: ic3net.IC3NetConfig, ecfg=None,
         stop.set()
         if actor_thread:
             actor_thread.join(timeout=30)
+        flush_history()
     dt = max(time.perf_counter() - t0, 1e-9)
     env_rate = produced["windows"] * env_steps_window / dt
     upd_rate = updates / dt

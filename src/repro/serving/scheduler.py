@@ -38,12 +38,13 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import contracts
 from repro.models import transformer
 
 ADMISSION_MODES = ("continuous", "lockstep")
@@ -140,15 +141,11 @@ class _Slot:
     req: Request
     record: RequestRecord
     fed: int = 0                  # tokens fed so far (prompt first)
-    last_out: int = 0             # newest generated token (decode input)
+    gen: int = 0                  # tokens generated so far
 
     @property
     def done_prefill(self) -> bool:
         return self.fed >= len(self.req.prompt)
-
-    def next_input(self) -> int:
-        return (int(self.req.prompt[self.fed]) if not self.done_prefill
-                else self.last_out)
 
 
 class Engine:
@@ -161,7 +158,8 @@ class Engine:
     """
 
     def __init__(self, session, capacity: int, max_seq: int, *,
-                 admission: str = "continuous"):
+                 admission: str = "continuous",
+                 debug_contracts: Optional[bool] = None):
         if admission not in ADMISSION_MODES:
             raise ValueError(
                 f"admission must be one of {ADMISSION_MODES}, "
@@ -172,6 +170,10 @@ class Engine:
         self.capacity = capacity
         self.max_seq = max_seq
         self.admission = admission
+        # opt-in recompile contract; None inherits the session's flag
+        self.debug_contracts = (
+            getattr(session, "debug_contracts", False)
+            if debug_contracts is None else debug_contracts)
         self._reset = jax.jit(transformer.reset_slots)
 
     # -- one run -----------------------------------------------------------
@@ -182,7 +184,21 @@ class Engine:
         The request list is an open-loop schedule: each request becomes
         visible at its ``arrival`` tick regardless of engine progress.
         Deterministic given the session's params and the request list.
+
+        With ``debug_contracts`` on (here or on the session), the whole
+        run executes under :func:`repro.analysis.contracts.no_retrace`:
+        the decode step, slot reset and plan certification may each
+        compile once — a second compile of any of them mid-run (a shape
+        instability, a traced flag, a lost jit cache) raises
+        :class:`~repro.analysis.contracts.RetraceError` instead of
+        silently stalling the tick loop.
         """
+        if self.debug_contracts:
+            with contracts.no_retrace(label="Engine.run"):
+                return self._run(requests)
+        return self._run(requests)
+
+    def _run(self, requests: Sequence[Request]) -> ServeReport:
         for r in requests:
             need = len(r.prompt) + r.max_new_tokens
             if need > self.max_seq:
@@ -205,6 +221,18 @@ class Engine:
         generated = 0
         wall0 = time.perf_counter()
 
+        # Deferred token plumbing: the jitted step's outputs stay on
+        # device. A decoding slot's next input is last step's output fed
+        # back device-side (jnp.where against the host prompt column), and
+        # token VALUES only reach the host in one batched fetch per
+        # completion boundary — the tick loop itself never blocks on the
+        # device (the marl scan's once-per-window host-fetch discipline;
+        # every lifecycle decision below runs on host counters alone).
+        prev_out = None                       # (b, 1) last step's tokens
+        outs_dev: List[jax.Array] = []        # per-step (b,) token columns
+        events: List[Tuple[RequestRecord, int, int]] = []  # (rec, step, i)
+        outs_base = 0                         # step index of outs_dev[0]
+
         def now() -> float:
             return time.perf_counter() - wall0
 
@@ -212,6 +240,18 @@ class Engine:
             t = now()
             while unstamped and unstamped[0].arrival <= tick:
                 unstamped.popleft().arrival_wall = t
+
+        def flush_tokens():
+            """One host fetch for every step since the last boundary."""
+            nonlocal outs_base
+            if events:
+                stacked = np.asarray(jnp.stack(outs_dev))     # 1 sync
+                for rec, step_idx, slot_i in events:
+                    rec.tokens.append(
+                        int(stacked[step_idx - outs_base, slot_i]))
+                events.clear()
+            outs_dev.clear()
+            outs_base = steps
 
         stamp_arrivals()
         while pending or any(slots):
@@ -248,35 +288,53 @@ class Engine:
 
             # -- one unified prefill/decode step --------------------------
             tok = np.zeros(b, np.int32)
+            fb = np.zeros(b, bool)     # rows fed from device feedback
             for i, s in enumerate(slots):
-                if s is not None:
-                    tok[i] = s.next_input()
+                if s is None:
+                    continue
+                if s.done_prefill:
+                    fb[i] = True       # input = last step's generated token
+                else:
+                    tok[i] = int(s.req.prompt[s.fed])
+            tok_dev = jnp.asarray(tok[:, None])
+            if prev_out is not None and fb.any():
+                tok_dev = jnp.where(jnp.asarray(fb[:, None]), prev_out,
+                                    tok_dev)
             next_tok, cache = self.session.decode(
-                cache, jnp.asarray(tok[:, None]),
+                cache, tok_dev,
                 jnp.asarray(pos[:, None].astype(np.int32)))
-            out = np.asarray(next_tok)[:, 0]
+            prev_out = next_tok
+            outs_dev.append(next_tok[:, 0])
             steps += 1
             tick += 1
             pos += 1           # the step advanced every row's device offset
             stamp_arrivals()
 
-            # -- bookkeeping / retirement ---------------------------------
+            # -- bookkeeping / retirement (host counters only) ------------
+            completed_now = []
             for i, s in enumerate(slots):
                 if s is None:
                     continue
                 s.fed += 1
-                if s.done_prefill:
-                    token = int(out[i])
-                    s.last_out = token
-                    s.record.tokens.append(token)
+                if s.done_prefill:     # this step yielded a generated token
+                    events.append((s.record, steps - 1, i))
+                    s.gen += 1
                     generated += 1
                     if s.record.first_token < 0:
                         s.record.first_token = tick
-                    if len(s.record.tokens) >= s.req.max_new_tokens:
+                    if s.gen >= s.req.max_new_tokens:
                         s.record.completed = tick
-                        s.record.completed_wall = now()
+                        completed_now.append(s.record)
                         slots[i] = None
+            if completed_now:
+                # completion boundary: materialize the window (blocks
+                # until the device caught up) and stamp honest wall times
+                flush_tokens()
+                t = now()
+                for rec in completed_now:
+                    rec.completed_wall = t
 
+        flush_tokens()
         wall = time.perf_counter() - wall0
         return ServeReport(admission=self.admission, capacity=b,
                            steps=steps, wall_s=wall,

@@ -54,10 +54,15 @@ class ServeSession:
 
     def __init__(self, cfg, params, *, plan_policy: str = "certify",
                  banded: bool = False, unroll_blocks: bool = False,
-                 share_plans: bool = True, jit: bool = True):
+                 share_plans: bool = True, jit: bool = True,
+                 debug_contracts: bool = False):
         self.cfg = cfg
         self.params = params
         self.plan_policy = check_plan_policy(plan_policy)
+        # opt-in trace/compile contract (repro.analysis.contracts):
+        # engines built on this session run their tick loop under
+        # no_retrace — one compile per jitted step per shape, ever
+        self.debug_contracts = debug_contracts
         self._share = share_plans
         self._grouped = cfg.flgw_groups > 1 and cfg.flgw_path == "grouped"
         self._slack = FLGWConfig(groups=cfg.flgw_groups,

@@ -1,0 +1,10 @@
+"""Fixture corpus for ``repro.analysis.lint`` (tests/test_analysis.py).
+
+Each rule has a positive fixture (``anl00x_bad.py`` — deliberately
+violates the rule) and a negative one (``anl00x_good.py`` — exercises
+the same constructs correctly and must lint clean). This ``__init__.py``
+exists so the ANL001 importability heuristic (sibling ``__init__.py``)
+fires on the fixtures; the files are never imported at runtime, only
+parsed. The directory is in the linter's DEFAULT_EXCLUDES so the
+repo-wide CI run never trips over the positive corpus.
+"""

@@ -1,0 +1,25 @@
+"""Positive fixture: import-time device-array construction (ANL001).
+
+The PR-8 lockout regression class: a module-level jnp constant commits
+the process to a backend at import, so the ``jax.distributed.initialize``
+call in ``main`` dies with "backend already initialized" on multi-host
+bring-up — exactly what happened when the MARL env modules grew
+module-level constants.
+"""
+import jax
+import jax.numpy as jnp
+
+_OFFSETS = jnp.arange(4)            # ANL001: array at import time
+_KEY = jax.random.PRNGKey(0)        # ANL001: jax.random at import time
+_N = jax.device_count()             # ANL001: backend query at import time
+
+try:
+    _FALLBACK = jnp.zeros((2,))     # ANL001: try-body still runs at import
+except RuntimeError:
+    _FALLBACK = None
+
+
+def main():
+    # too late: the constants above already initialized a backend
+    jax.distributed.initialize()
+    return _OFFSETS

@@ -1,0 +1,16 @@
+"""Negative fixture: lazy / numpy module constants lint clean (ANL001)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_TABLE = np.arange(4)       # numpy at import is host-only, fine
+_DTYPE = jnp.float32        # a dtype reference, not a constructor
+
+
+def offsets():
+    return jnp.asarray(_TABLE)    # device materialization deferred to call
+
+
+def main():
+    jax.distributed.initialize()  # runs before any device array exists
+    return offsets()

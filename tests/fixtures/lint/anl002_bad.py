@@ -1,0 +1,40 @@
+"""Positive fixture: host-device syncs in traced contexts (ANL002)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def jitted_loss(x):
+    return float(jnp.sum(x))             # ANL002: float() under jit
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def jitted_cumsum(x, n):
+    return np.asarray(jnp.cumsum(x))[:n]   # ANL002: np.asarray under jit
+
+
+def make_train_step(cfg):
+    def train_step(state, batch):
+        loss = jnp.mean(batch)
+        return state, loss.item()        # ANL002: .item() in a factory step
+    return train_step
+
+
+def _scan_body(carry, x):
+    s = carry + x
+    return s, float(jnp.sum(s))          # ANL002: float() in a scan body
+
+
+def run_scan(xs):
+    return jax.lax.scan(_scan_body, jnp.zeros(()), xs)
+
+
+def drive(session, cache, tok, pos, steps):
+    outs = []
+    for _ in range(steps):
+        tok, cache = session.decode(cache, tok, pos)
+        outs.append(np.asarray(tok))     # ANL002: per-step fetch, hot loop
+    return outs

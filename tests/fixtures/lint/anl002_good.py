@@ -1,0 +1,34 @@
+"""Negative fixture: static casts and windowed fetches lint clean
+(ANL002)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def scaled(x):
+    scale = float(x.shape[-1] ** -0.5)   # static shape arithmetic
+    return x * scale
+
+
+def make_eval_step(cfg):
+    def eval_step(params, batch):
+        return jnp.mean(batch) * float(len(cfg))   # len() is host data
+    return eval_step
+
+
+def drive(session, cache, tok, pos, steps):
+    outs = []
+    for _ in range(steps):
+        tok, cache = session.decode(cache, tok, pos)
+        outs.append(tok[:, 0])           # stays on device
+    return np.asarray(jnp.stack(outs))   # one fetch at the boundary
+
+
+def timed(jit_step, x, iters):
+    t = 0.0
+    for _ in range(iters):
+        y = jit_step(x)
+        y.block_until_ready()            # explicit timing loop: exempt
+        t = float(y[0])
+    return t

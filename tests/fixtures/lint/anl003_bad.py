@@ -1,0 +1,69 @@
+"""Positive fixture: pallas_call structural inconsistencies (ANL003)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BM = 8
+BN = 16
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def arity_mismatch(x):
+    # ANL003: in_specs index_map takes 1 grid index, grid has 2 dims
+    return pl.pallas_call(
+        _kernel,
+        grid=(2, 2),
+        in_specs=[pl.BlockSpec((BM, BN), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((BM * 2, BN * 2), jnp.float32),
+    )(x)
+
+
+def rank_mismatch(x):
+    # ANL003: out_specs block shape is rank 2, out_shape is rank 1
+    return pl.pallas_call(
+        _kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((BM, BN), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BM, BN), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BM * 2,), jnp.float32),
+    )(x)
+
+
+def operand_mismatch(x, y):
+    # ANL003: 1 in_spec but the call is applied to 2 operands
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((BM, BN), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BM, BN), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BM, BN), jnp.float32),
+    )(x, y)
+
+
+def scratch_mismatch(x):
+    # ANL003: scratch dim 32 is not drawn from any block shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((BM, BN), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BM, BN), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BM, BN), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((BM, 32), jnp.float32)],
+    )(x)
+
+
+def traced_interpret(x, flag):
+    # ANL003: interpret= is a computed value, not a Python bool
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((BM, BN), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BM, BN), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BM, BN), jnp.float32),
+        interpret=bool(jnp.asarray(flag)),
+    )(x)

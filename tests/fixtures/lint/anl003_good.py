@@ -1,0 +1,29 @@
+"""Negative fixture: a structurally consistent pallas_call lints clean
+(ANL003), including the closure-capture index_map default idiom."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BM = 8
+BN = 16
+INTERPRET = True
+
+
+def _kernel(x_ref, o_ref, acc_ref, flag_ref):
+    acc_ref[...] = x_ref[...] * 2.0
+    o_ref[...] = acc_ref[...]
+
+
+def consistent(x, qpk=2):
+    return pl.pallas_call(
+        _kernel,
+        grid=(2, 2),
+        in_specs=[pl.BlockSpec((BM, BN),
+                               lambda i, j, qpk=qpk: (i * qpk, j))],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((BM * 2, BN * 2), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32),
+                        pltpu.SMEM((1, 1), jnp.float32)],
+        interpret=INTERPRET,
+    )(x)

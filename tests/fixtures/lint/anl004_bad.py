@@ -1,0 +1,46 @@
+"""Positive fixture: undeclared custom_vjp statics (ANL004)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.custom_vjp
+def relu_undeclared(x, approximate: bool = True):
+    # ANL004: bool param not in nondiff_argnums; no defvjp registration
+    return jnp.maximum(x, 0.0) if approximate else x
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def scale_out_of_range(x, s):
+    # ANL004: nondiff index 5 out of range for 2 positional params
+    return x * s
+
+
+def _scale_fwd(x, s):
+    return x * s, (x, s)
+
+
+def _scale_bwd(res, g):
+    x, s = res
+    return g * s, g * x
+
+
+scale_out_of_range.defvjp(_scale_fwd, _scale_bwd)
+
+
+@jax.custom_vjp
+def kw_only_mode(x, *, mode: str = "fast"):
+    # ANL004: keyword-only params are unsupported by custom_vjp
+    return x
+
+
+def _kw_fwd(x):
+    return x, None
+
+
+def _kw_bwd(_, g):
+    return (g,)
+
+
+kw_only_mode.defvjp(_kw_fwd, _kw_bwd)

@@ -1,0 +1,23 @@
+"""Negative fixture: a fully declared custom_vjp lints clean (ANL004)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def leaky(x, slope: str = "soft"):
+    scale = 0.01 if slope == "soft" else 0.1
+    return jnp.where(x > 0, x, scale * x)
+
+
+def _leaky_fwd(x, slope):
+    return leaky(x, slope), x
+
+
+def _leaky_bwd(slope, x, g):
+    scale = 0.01 if slope == "soft" else 0.1
+    return (jnp.where(x > 0, g, scale * g),)
+
+
+leaky.defvjp(_leaky_fwd, _leaky_bwd)

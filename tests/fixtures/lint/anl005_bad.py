@@ -1,0 +1,29 @@
+"""Positive fixture: scan carry structure mismatches (ANL005)."""
+import jax
+import jax.numpy as jnp
+
+
+def _drops_state(carry, x):
+    h, c = carry
+    h = h + x + c
+    return (h,), h         # ANL005: unpacks 2-element carry, returns 1
+
+
+def run_drop(xs):
+    init = (jnp.zeros(()), jnp.zeros(()))
+    return jax.lax.scan(_drops_state, init, xs)
+
+
+def _triple(carry, x):
+    s = carry + x
+    return s, s, s         # ANL005: 3-tuple, not a (carry, ys) pair
+
+
+def run_triple(xs):
+    return jax.lax.scan(_triple, jnp.zeros(()), xs)
+
+
+def run_lambda(xs):
+    # ANL005: init literal has 2 elements, carry-out has 3
+    return jax.lax.scan(lambda c, x: ((c[0], c[1], x), x),
+                        (jnp.zeros(()), jnp.ones(())), xs)

@@ -1,0 +1,21 @@
+"""Negative fixture: a structurally matched scan carry lints clean
+(ANL005)."""
+import jax
+import jax.numpy as jnp
+
+
+def _lstm_step(carry, x):
+    h, c = carry
+    h2 = jnp.tanh(x + h)
+    c2 = c + h2
+    return (h2, c2), h2
+
+
+def run(xs):
+    init = (jnp.zeros(()), jnp.zeros(()))
+    return jax.lax.scan(_lstm_step, init, xs)
+
+
+def run_lambda(xs):
+    return jax.lax.scan(lambda c, x: ((c[0] + x, c[1]), c[0]),
+                        (jnp.zeros(()), jnp.ones(())), xs)

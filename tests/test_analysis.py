@@ -1,0 +1,232 @@
+"""The static-analysis + contracts subsystem (``repro.analysis``).
+
+Two layers under test:
+
+* the AST linter — every rule ANL001..ANL005 against its positive and
+  negative fixture (``tests/fixtures/lint/``), plus the suppression
+  machinery (per-line ``# noqa``, the committed baseline, CLI exits);
+* the runtime contracts — ``trace_counter`` parity with the retired
+  per-file counting monkeypatch, ``assert_max_traces``, and
+  ``no_retrace`` catching a deliberately shape-unstable jit loop.
+"""
+import os
+import types
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import contracts
+from repro.analysis.lint import (DEFAULT_EXCLUDES, Finding,
+                                 apply_baseline, format_baseline_entry,
+                                 lint_file, lint_paths, lint_source,
+                                 load_baseline, main)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures", "lint")
+
+# rule -> findings its positive fixture must produce (count pins the
+# fixture corpus: every deliberate violation is caught, nothing extra)
+EXPECTED = {"ANL001": 4, "ANL002": 5, "ANL003": 5, "ANL004": 4,
+            "ANL005": 3}
+
+
+def _fixture(rule: str, kind: str) -> str:
+    return os.path.join(FIXTURES, f"{rule.lower()}_{kind}.py")
+
+
+# -- the rules, fixture by fixture -------------------------------------------
+
+@pytest.mark.parametrize("rule", sorted(EXPECTED))
+def test_positive_fixture_fires_only_its_rule(rule):
+    findings = lint_file(_fixture(rule, "bad"))
+    assert findings, f"{rule} positive fixture produced no findings"
+    assert {f.code for f in findings} == {rule}
+    assert len(findings) == EXPECTED[rule]
+
+
+@pytest.mark.parametrize("rule", sorted(EXPECTED))
+def test_negative_fixture_is_clean_across_all_rules(rule):
+    assert lint_file(_fixture(rule, "good")) == []
+
+
+def test_anl001_pins_the_pr8_lockout_regression():
+    """The exact PR-8 failure shape: a module-level jnp constant in a
+    module whose main() calls jax.distributed.initialize."""
+    findings = lint_file(_fixture("ANL001", "bad"))
+    lines = {f.line: f for f in findings}
+    src = open(_fixture("ANL001", "bad")).read().splitlines()
+    flagged = [src[ln - 1] for ln in lines]
+    assert any("jnp.arange" in s for s in flagged)
+    assert any("jax.random.PRNGKey" in s for s in flagged)
+    # ...and the fixture really contains the doomed initialize call
+    assert any("jax.distributed.initialize" in s for s in src)
+
+
+def test_anl001_needs_importability():
+    """tests/benchmarks scripts (no sibling __init__.py) are exempt —
+    they run top to bottom, import-time arrays are their job."""
+    src = "import jax.numpy as jnp\nX = jnp.zeros((2,))\n"
+    assert lint_source(src, importable=True)
+    assert lint_source(src, importable=False) == []
+
+
+def test_select_restricts_rules():
+    findings = lint_file(_fixture("ANL002", "bad"), select=["ANL001"])
+    assert findings == []
+
+
+# -- suppression: noqa + baseline --------------------------------------------
+
+def test_noqa_suppresses_matching_code_only():
+    base = "import jax.numpy as jnp\nX = jnp.zeros((2,))"
+    assert lint_source(base + "  # noqa: ANL001\n", importable=True) == []
+    assert lint_source(base + "  # noqa\n", importable=True) == []
+    assert lint_source(base + "  # noqa: ANL003\n", importable=True)
+    assert lint_source(
+        base + "  # noqa: ANL003, ANL001\n", importable=True) == []
+
+
+def test_baseline_roundtrip(tmp_path):
+    findings = lint_file(_fixture("ANL005", "bad"))
+    bl = tmp_path / "baseline.txt"
+    bl.write_text("# why: fixture corpus, accepted\n" + "\n".join(
+        format_baseline_entry(f) for f in findings) + "\n")
+    loaded = load_baseline(str(bl))
+    assert sum(loaded.values()) == len(findings)
+    new, old = apply_baseline(findings, loaded)
+    assert new == [] and len(old) == len(findings)
+    # an extra finding not covered by the baseline stays new
+    extra = Finding("x.py", 1, 0, "ANL005", "m", "src-line")
+    new, _ = apply_baseline(findings + [extra], loaded)
+    assert new == [extra]
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    bad = _fixture("ANL001", "bad")
+    # fixtures are default-excluded: the repo-wide invocation stays clean
+    assert main([bad, "--no-baseline", "--check"]) == 0
+    # --no-default-excludes turns the same invocation red
+    assert main([bad, "--no-baseline", "--check",
+                 "--no-default-excludes"]) == 1
+    # a baseline covering every finding turns it green again
+    bl = tmp_path / "bl.txt"
+    assert main([bad, "--write-baseline", "--baseline", str(bl),
+                 "--no-default-excludes"]) == 0
+    assert main([bad, "--check", "--baseline", str(bl),
+                 "--no-default-excludes"]) == 0
+    capsys.readouterr()
+
+
+def test_default_excludes_cover_the_fixture_corpus():
+    findings = lint_paths([FIXTURES])
+    assert findings == []
+    assert lint_paths([FIXTURES], excludes=())
+    assert any("fixtures" in x for x in DEFAULT_EXCLUDES)
+
+
+def test_syntax_error_reports_anl000():
+    findings = lint_source("def broken(:\n", "broken.py")
+    assert [f.code for f in findings] == ["ANL000"]
+
+
+# -- contracts: trace_counter ------------------------------------------------
+
+def _fake_module():
+    ns = types.SimpleNamespace()
+    ns.__name__ = "fake"
+    ns.make_plan = lambda a, b: (a, b)
+    return ns
+
+
+def test_trace_counter_counts_and_restores():
+    mod = _fake_module()
+    real = mod.make_plan
+    with contracts.trace_counter(mod, "make_plan") as calls:
+        assert mod.make_plan(1, 2) == (1, 2)   # delegates
+        mod.make_plan(3, 4)
+        assert calls.count == 2 and int(calls) == 2
+        calls.reset()                          # the mid-test reset idiom
+        mod.make_plan(5, 6)
+        assert calls.count == 1
+    assert mod.make_plan is real               # restored on exit
+
+
+def test_trace_counter_restores_on_exception():
+    mod = _fake_module()
+    real = mod.make_plan
+    with pytest.raises(RuntimeError):
+        with contracts.trace_counter(mod, "make_plan"):
+            raise RuntimeError("boom")
+    assert mod.make_plan is real
+
+
+def test_trace_counter_records_args():
+    mod = _fake_module()
+    with contracts.trace_counter(mod, "make_plan",
+                                 record_args=True) as calls:
+        mod.make_plan(1, b=2)
+    assert calls.calls == [((1,), {"b": 2})]
+
+
+def test_trace_counter_counts_traces_like_the_old_idiom():
+    """Parity with the retired monkeypatch: calls under jax tracing
+    (eval_shape) count — the number of traces IS the contract."""
+    mod = _fake_module()
+    mod.make_plan = lambda x: x * 2.0
+    with contracts.trace_counter(mod, "make_plan") as calls:
+        jax.eval_shape(lambda x: mod.make_plan(x) + mod.make_plan(x),
+                       jnp.zeros((3,)))
+    assert calls.count == 2
+
+
+def test_assert_max_traces():
+    mod = _fake_module()
+    with contracts.assert_max_traces(mod, "make_plan", 2):
+        mod.make_plan(1, 2)
+    with pytest.raises(contracts.ContractViolation, match="at most 1"):
+        with contracts.assert_max_traces(mod, "make_plan", 1):
+            mod.make_plan(1, 2)
+            mod.make_plan(3, 4)
+    with pytest.raises(contracts.ContractViolation, match="exactly 2"):
+        with contracts.assert_max_traces(mod, "make_plan", 2,
+                                         exactly=True):
+            mod.make_plan(1, 2)
+
+
+# -- contracts: no_retrace ---------------------------------------------------
+
+def test_no_retrace_catches_shape_unstable_loop():
+    """The deliberate violation: one jitted function fed a different
+    shape every iteration recompiles per step — exactly the silent
+    serving-stall class the Engine/async debug_contracts hook guards."""
+    @jax.jit
+    def unstable_step(x):
+        return x * 2.0
+
+    with pytest.raises(contracts.RetraceError, match="unstable_step"):
+        with contracts.no_retrace(label="unit"):
+            for n in range(1, 4):
+                unstable_step(jnp.zeros((n,)))
+
+
+def test_no_retrace_passes_shape_stable_loop():
+    @jax.jit
+    def stable_step(x):
+        return x + 1.0
+
+    with contracts.no_retrace() as mon:
+        for _ in range(5):
+            stable_step(jnp.zeros((3,)))
+    counts = mon.counts()
+    assert all(n <= 1 for n in counts.values())
+
+
+def test_no_retrace_allowlist_and_monitor():
+    @jax.jit
+    def allowed_poly(x):
+        return x - 1.0
+
+    with contracts.no_retrace(allow=("allowed_poly",)) as mon:
+        for n in range(1, 4):
+            allowed_poly(jnp.zeros((n,)))
+    assert mon.counts().get("allowed_poly", 0) >= 2  # seen but exempt

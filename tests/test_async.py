@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.contracts import trace_counter
 from repro.core import encoder, grouped
 from repro.core.schedule import SparsitySchedule
 from repro.launch import mesh as mesh_lib
@@ -339,26 +340,20 @@ def test_adopt_heals_a_mismatched_bundle():
     _assert_trees_equal(same.plans, good.plans)
 
 
-def test_actor_step_traces_zero_plan_encodes(monkeypatch):
+def test_actor_step_traces_zero_plan_encodes():
     """Actors only CONSUME published plans: tracing the actor rollout with
     a certified bundle must hit make_plan zero times — all encode work
     lives behind the publication boundary."""
     cfg, key, params, plans = _grouped_setup()
     bundle = at.publish(params, plans, 0, cfg)
-    calls = {"n": 0}
-    real = grouped.make_plan
-
-    def counting(*a, **kw):
-        calls["n"] += 1
-        return real(*a, **kw)
-
-    monkeypatch.setattr(grouped, "make_plan", counting)
     ecfg = _tiny_ecfg()
     tcfg = train_mod.TrainConfig(batch=2)
-    jax.eval_shape(
-        lambda p, k, pl: at.actor_rollout(p, k, cfg, ecfg, tcfg, PP, pl),
-        bundle.params, key, bundle.plans)
-    assert calls["n"] == 0
+    with trace_counter(grouped, "make_plan") as calls:
+        jax.eval_shape(
+            lambda p, k, pl: at.actor_rollout(p, k, cfg, ecfg, tcfg,
+                                              PP, pl),
+            bundle.params, key, bundle.plans)
+    assert calls.count == 0
 
 
 def test_async_train_check_publication_holds_across_versions():

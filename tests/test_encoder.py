@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.contracts import trace_counter
 from repro.core import encoder, grouped
 from repro.core.flgw import FLGWConfig
 from repro.core.schedule import SparsitySchedule
@@ -176,8 +177,8 @@ def test_on_change_parity_with_per_step_encoding():
            _flip_one_argmax(_flip_one_argmax(params), layer="comm"),
            _flip_one_argmax(_flip_one_argmax(params), layer="comm")]
     for t, p in enumerate(seq, start=1):
-        changed = (np.asarray(encoder.plan_signature(p))
-                   != np.asarray(state.sig))
+        changed = (np.asarray(encoder.plan_signature(p))  # noqa: ANL002 — refresh-mode test compares signatures per step by design
+                   != np.asarray(state.sig))  # noqa: ANL002 — same: the per-step comparison is the test
         prev = state
         state = refresh(p, state, t, cfg=FL, schedule=sched)
         if changed:
@@ -251,48 +252,33 @@ def _lm_batch(cfg, b=2, s=16):
     return {"tokens": tok, "targets": tok, "positions": pos}
 
 
-def test_lm_apply_with_plans_never_traces_make_plan(monkeypatch):
+def test_lm_apply_with_plans_never_traces_make_plan():
     """Regression guard for the decoder-stack amortization: with a
     PlanState supplied, tracing the forward hits make_plan zero times; the
     plan=None fallback re-encodes once per FLGW projection."""
-    calls = {"n": 0}
-    real = grouped.make_plan
-
-    def counting(*a, **kw):
-        calls["n"] += 1
-        return real(*a, **kw)
-
     cfg = _tiny_lm_cfg()
     params, _ = transformer.lm_init(jax.random.PRNGKey(0), cfg)
     plans = transformer.encode_plans(params, cfg)
     batch = _lm_batch(cfg)
-    monkeypatch.setattr(grouped, "make_plan", counting)
+    with trace_counter(grouped, "make_plan") as calls:
+        jax.eval_shape(
+            lambda p, pl: transformer.lm_apply(
+                p, cfg, batch["tokens"], batch["positions"], plans=pl,
+                return_hidden=True),
+            params, plans)
+        assert calls.count == 0
 
-    jax.eval_shape(
-        lambda p, pl: transformer.lm_apply(
-            p, cfg, batch["tokens"], batch["positions"], plans=pl,
-            return_hidden=True),
-        params, plans)
-    assert calls["n"] == 0
-
-    jax.eval_shape(
-        lambda p: transformer.lm_apply(
-            p, cfg, batch["tokens"], batch["positions"],
-            return_hidden=True),
-        params)
-    assert calls["n"] == 3        # up/gate/down re-encoded per projection
+        jax.eval_shape(
+            lambda p: transformer.lm_apply(
+                p, cfg, batch["tokens"], batch["positions"],
+                return_hidden=True),
+            params)
+        assert calls.count == 3   # up/gate/down re-encoded per projection
 
 
-def test_lm_train_step_encodes_once_per_refresh(monkeypatch):
+def test_lm_train_step_encodes_once_per_refresh():
     """Tracing one LM train step hits make_plan exactly once per FLGW
     layer — inside the refresh cond — not per projection."""
-    calls = {"n": 0}
-    real = grouped.make_plan
-
-    def counting(*a, **kw):
-        calls["n"] += 1
-        return real(*a, **kw)
-
     cfg = _tiny_lm_cfg()
     state = state_lib.init_state(jax.random.PRNGKey(0), cfg,
                                  optimizer="rmsprop")
@@ -300,25 +286,12 @@ def test_lm_train_step_encodes_once_per_refresh(monkeypatch):
     step = step_lib.make_train_step(
         cfg, optimizer="rmsprop",
         schedule=SparsitySchedule(groups=4, refresh_every=2))
-    monkeypatch.setattr(grouped, "make_plan", counting)
-    jax.eval_shape(step, state, _lm_batch(cfg))
-    assert calls["n"] == 3        # one encode per FLGW layer, in the cond
+    with trace_counter(grouped, "make_plan") as calls:
+        jax.eval_shape(step, state, _lm_batch(cfg))
+    assert calls.count == 3       # one encode per FLGW layer, in the cond
 
 
-def _counting_make_plan(monkeypatch):
-    calls = {"n": 0}
-    real = grouped.make_plan
-
-    def counting(*a, **kw):
-        calls["n"] += 1
-        return real(*a, **kw)
-
-    monkeypatch.setattr(grouped, "make_plan", counting)
-    return calls
-
-
-def test_serve_step_with_cached_planstate_never_traces_make_plan(
-        monkeypatch):
+def test_serve_step_with_cached_planstate_never_traces_make_plan():
     """The serving acceptance bar: with the PlanState beside the KV cache,
     tracing the decode step hits make_plan zero times even when mixers
     (attention here) are FLGW targets — no slot falls back to plan=None."""
@@ -328,17 +301,17 @@ def test_serve_step_with_cached_planstate_never_traces_make_plan(
     assert isinstance(cache["plans"], encoder.PlanState)
     serve = make_decode_step(cfg)
     tok = jnp.zeros((1, 1), jnp.int32)
-    calls = _counting_make_plan(monkeypatch)
-    jax.eval_shape(serve, params, cache, tok, tok)
-    assert calls["n"] == 0
+    with trace_counter(grouped, "make_plan") as calls:
+        jax.eval_shape(serve, params, cache, tok, tok)
+        assert calls.count == 0
 
-    # the plan-less cache falls back to one encode per FLGW projection
-    bare = transformer.init_cache(cfg, 1, 8)
-    jax.eval_shape(serve, params, bare, tok, tok)
-    assert calls["n"] == 7        # q/k/v/o + up/gate/down
+        # the plan-less cache falls back to one encode per FLGW projection
+        bare = transformer.init_cache(cfg, 1, 8)
+        jax.eval_shape(serve, params, bare, tok, tok)
+        assert calls.count == 7   # q/k/v/o + up/gate/down
 
 
-def test_prefill_step_encodes_once_per_layer(monkeypatch):
+def test_prefill_step_encodes_once_per_layer():
     """Prefill encodes the PlanState once (batched over blocks, one
     make_plan per FLGW layer) and every projection consumes it. A
     caller-supplied PlanState is *certified* at the request boundary
@@ -352,14 +325,15 @@ def test_prefill_step_encodes_once_per_layer(monkeypatch):
     plans = transformer.encode_plans(params, cfg)
     prefill = make_prefill_step(cfg)
     batch = _lm_batch(cfg)
-    calls = _counting_make_plan(monkeypatch)
-    jax.eval_shape(prefill, params, batch)
-    assert calls["n"] == 7        # one per FLGW layer, not per projection
-    calls["n"] = 0
-    jax.eval_shape(prefill, params, batch, plans)
-    # the certification branch traces the same once-per-layer encode
-    # (inside lax.cond — zero encodes execute while the plans are fresh)
-    assert calls["n"] == 7
+    with trace_counter(grouped, "make_plan") as calls:
+        jax.eval_shape(prefill, params, batch)
+        assert calls.count == 7   # one per FLGW layer, not per projection
+        calls.reset()
+        jax.eval_shape(prefill, params, batch, plans)
+        # the certification branch traces the same once-per-layer encode
+        # (inside lax.cond — zero encodes execute while the plans are
+        # fresh)
+        assert calls.count == 7
 
 
 def test_lm_train_step_runs_and_carries_plans():

@@ -257,21 +257,14 @@ def test_grouped_stale_plans_actually_change_training():
     assert not np.allclose(losses[1], losses[4])
 
 
-def test_encode_happens_once_per_refresh_not_per_projection(monkeypatch):
+def test_encode_happens_once_per_refresh_not_per_projection():
     """Regression guard for the OSEL amortization: tracing one training
     chunk must hit make_plan exactly once per FLGW layer (inside the
     refresh cond), independent of iterations/batch/rollout length — NOT
     once per projection call (the plan=None fallback)."""
+    from repro.analysis.contracts import trace_counter
     from repro.core import grouped
     from repro.core.schedule import SparsitySchedule
-    calls = {"n": 0}
-    real = grouped.make_plan
-
-    def counting(*a, **kw):
-        calls["n"] += 1
-        return real(*a, **kw)
-
-    monkeypatch.setattr(grouped, "make_plan", counting)
     cfg = ic3net.IC3NetConfig(hidden=16, flgw_groups=4, flgw_path="grouped")
     ecfg = env_mod.EnvConfig(n_agents=2, size=3, max_steps=6)
     tcfg = train_mod.TrainConfig(batch=3)
@@ -281,12 +274,13 @@ def test_encode_happens_once_per_refresh_not_per_projection(monkeypatch):
     plans = ic3net.encode_plans(params, cfg2)
     n_flgw_layers = len(plans.plans)
     assert n_flgw_layers == 5    # enc, lstm_x, lstm_h, comm, policy
-    calls["n"] = 0
-    # eager _scan_chunk: lax.scan traces the body exactly once
-    train_mod._scan_chunk(params, opt_state, key, plans,
-                          jnp.zeros((), jnp.int32), 4, cfg2, ecfg, tcfg, e,
-                          SparsitySchedule(groups=4, refresh_every=2))
-    assert calls["n"] == n_flgw_layers, calls["n"]
+    with trace_counter(grouped, "make_plan") as calls:
+        # eager _scan_chunk: lax.scan traces the body exactly once
+        train_mod._scan_chunk(params, opt_state, key, plans,
+                              jnp.zeros((), jnp.int32), 4, cfg2, ecfg,
+                              tcfg, e,
+                              SparsitySchedule(groups=4, refresh_every=2))
+    assert calls.count == n_flgw_layers, calls.count
 
 
 def test_history_carries_throughput_and_sparsity_metrics():

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.contracts import trace_counter
 from repro.configs import registry
 from repro.core import encoder, grouped
 from repro.models import transformer
@@ -117,7 +118,7 @@ def test_lockstep_engine_matches_scalar_cache_loop(session):
         nxt, cache = session.decode(
             cache, jnp.asarray(col[:, None]),
             session.greedy_positions(b, t))
-        last = np.asarray(nxt)[:, 0]
+        last = np.asarray(nxt)[:, 0]  # noqa: ANL002 — reference loop: per-step fetch IS the baseline
         if t >= p_len - 1:
             for i in range(b):
                 outs[i].append(int(last[i]))
@@ -159,26 +160,19 @@ def test_arrivals_gate_admission(session):
 
 # -- plan economy across a run ----------------------------------------------
 
-def test_whole_run_costs_one_encode(monkeypatch):
+def test_whole_run_costs_one_encode():
     """Admission certifies via the process plan cache: a multi-request
     run traces ``make_plan`` exactly once per FLGW layer, total."""
     cfg = _tiny_cfg()
     params, _ = transformer.lm_init(jax.random.PRNGKey(0), cfg)
     n_layers = sum(1 for _ in encoder.iter_flgw_layers(params))
-    calls = {"n": 0}
-    real = grouped.make_plan
-
-    def counting(*a, **kw):
-        calls["n"] += 1
-        return real(*a, **kw)
-
-    monkeypatch.setattr(grouped, "make_plan", counting)
-    sess = ServeSession(cfg, params, plan_policy="certify")
-    reqs = synthetic_requests(3, 6, vocab=256, p_arrive=0.6,
-                              prompt_len=(2, 6), gen_len=(2, 6))
-    Engine(sess, capacity=2, max_seq=max_seq_for(reqs),
-           admission="continuous").run(reqs)
-    assert calls["n"] == n_layers
+    with trace_counter(grouped, "make_plan") as calls:
+        sess = ServeSession(cfg, params, plan_policy="certify")
+        reqs = synthetic_requests(3, 6, vocab=256, p_arrive=0.6,
+                                  prompt_len=(2, 6), gen_len=(2, 6))
+        Engine(sess, capacity=2, max_seq=max_seq_for(reqs),
+               admission="continuous").run(reqs)
+    assert calls.count == n_layers
     assert plan_cache.stats()["encodes"] == 1
 
 

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.contracts import trace_counter
 from repro.configs import registry
 from repro.core import encoder, grouped
 from repro.models import transformer
@@ -117,30 +118,23 @@ def test_policies_decode_identically(served):
     for policy in PLAN_POLICIES:
         sess = ServeSession(cfg, params, plan_policy=policy)
         nxt, _ = sess.decode(sess.new_cache(1, 8), tok, pos)
-        outs[policy] = np.asarray(nxt)
+        outs[policy] = np.asarray(nxt)  # noqa: ANL002 — one decode per policy, fetched for comparison
     np.testing.assert_array_equal(outs["certify"], outs["trust"])
     np.testing.assert_array_equal(outs["certify"], outs["off"])
 
 
 # -- the process-wide plan cache ---------------------------------------------
 
-def test_shared_plans_one_encode_for_n_sessions(served, monkeypatch):
+def test_shared_plans_one_encode_for_n_sessions(served):
     """Trace-count guard: N concurrent sessions over one params version
     cost exactly one ``make_plan`` per FLGW layer, process-wide."""
     cfg, params = served
     n_layers = sum(1 for _ in encoder.iter_flgw_layers(params))
     assert n_layers > 0
-    calls = {"n": 0}
-    real = grouped.make_plan
-
-    def counting(*a, **kw):
-        calls["n"] += 1
-        return real(*a, **kw)
-
-    monkeypatch.setattr(grouped, "make_plan", counting)
-    sessions = [ServeSession(cfg, params, plan_policy="certify")
-                for _ in range(4)]
-    assert calls["n"] == n_layers                 # ONE encode total
+    with trace_counter(grouped, "make_plan") as calls:
+        sessions = [ServeSession(cfg, params, plan_policy="certify")
+                    for _ in range(4)]
+        assert calls.count == n_layers            # ONE encode total
     first = sessions[0].plans
     for s in sessions[1:]:
         assert s.plans is first                   # literally shared
@@ -148,7 +142,7 @@ def test_shared_plans_one_encode_for_n_sessions(served, monkeypatch):
     assert st["encodes"] == 1 and st["hits"] == 3
 
 
-def test_fused_decode_no_per_call_make_plan(served, monkeypatch):
+def test_fused_decode_no_per_call_make_plan(served):
     """Trace-count guard for the fused consume path: a cache built by the
     session carries compact weights (``GroupPlan.wc`` — the fused
     ``flgw_matmul`` prologue's operand), and decoding with it costs ZERO
@@ -160,29 +154,19 @@ def test_fused_decode_no_per_call_make_plan(served, monkeypatch):
     assert grouped.has_compact(cache["plans"].plans)
     attached = cache["plans"]
 
-    calls = {"plan": 0, "attach": 0}
-    real_plan, real_attach = grouped.make_plan, grouped.attach_compact
-
-    def counting_plan(*a, **kw):
-        calls["plan"] += 1
-        return real_plan(*a, **kw)
-
-    def counting_attach(*a, **kw):
-        calls["attach"] += 1
-        return real_attach(*a, **kw)
-
-    monkeypatch.setattr(grouped, "make_plan", counting_plan)
-    monkeypatch.setattr(grouped, "attach_compact", counting_attach)
-    tok = jnp.zeros((1, 1), jnp.int32)
-    for i in range(3):
-        tok, cache = sess.decode(cache, tok, sess.greedy_positions(1, i))
-    assert calls["plan"] == 0
-    assert calls["attach"] == 0
-    # a second cache against the same (plans, params) pair reuses the
-    # session-local memo — still no re-gather
-    cache2 = sess.new_cache(1, 8)
-    assert cache2["plans"] is attached
-    assert calls["attach"] == 0
+    with trace_counter(grouped, "make_plan") as plan_calls, \
+            trace_counter(grouped, "attach_compact") as attach_calls:
+        tok = jnp.zeros((1, 1), jnp.int32)
+        for i in range(3):
+            tok, cache = sess.decode(cache, tok,
+                                     sess.greedy_positions(1, i))
+        assert plan_calls.count == 0
+        assert attach_calls.count == 0
+        # a second cache against the same (plans, params) pair reuses the
+        # session-local memo — still no re-gather
+        cache2 = sess.new_cache(1, 8)
+        assert cache2["plans"] is attached
+        assert attach_calls.count == 0
 
 
 def test_shared_cache_state_stays_weight_free(served):
