@@ -1,11 +1,21 @@
-"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables."""
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables.
+
+``--vmem`` appends the per-kernel VMEM working-set table sourced from
+the static auditor (``repro.analysis.kernel_audit``) instead of
+hand-maintained docstring constants; ``--write-bench`` commits it as
+``BENCH_kernel_vmem.json``. The ``--vmem`` path is jax-free (the
+auditor never compiles anything), so it also runs in the no-jax CI
+analysis job.
+"""
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 import sys
 
 RESULTS = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 def fmt_bytes(n):
@@ -27,14 +37,100 @@ def load(tag_filter=""):
     return rows
 
 
+def _audit():
+    try:
+        from repro.analysis import kernel_audit
+    except ImportError:                      # script run without PYTHONPATH
+        sys.path.insert(0, str(REPO_ROOT / "src"))
+        from repro.analysis import kernel_audit
+    return kernel_audit
+
+
+def vmem_section() -> list:
+    """Print the audited per-kernel VMEM table; returns the reports."""
+    ka = _audit()
+    reports = ka.audit_all()
+    budget = ka.DEFAULT_VMEM_BUDGET
+    print(f"## Kernel VMEM working sets (static audit, "
+          f"{budget // 2**20} MiB budget)")
+    print()
+    print("| kernel | case | grid | points | vmem/step | % budget "
+          "| checks |")
+    print("|---|---|---|---|---|---|---|")
+    for r in reports:
+        status = "ok" if r.ok else ",".join(
+            sorted({f.check for f in r.findings}))
+        print(f"| {r.kernel} | {r.case} | {'x'.join(map(str, r.grid))} "
+              f"| {r.grid_points} | {fmt_bytes(r.vmem_bytes)} "
+              f"| {100 * r.vmem_bytes / budget:.1f}% | {status} |")
+    print()
+    tags = {t for r in reports for t in r.tags}
+    print(f"corpus: {len(reports)} case(s), "
+          f"{len({r.kernel for r in reports})} kernel(s); tags: "
+          f"{', '.join(sorted(tags)) or '-'}")
+    return reports
+
+
+def write_vmem_bench() -> pathlib.Path:
+    """Commit the audited VMEM table as ``BENCH_kernel_vmem.json``."""
+    ka = _audit()
+    reports = ka.audit_all()
+    budget = ka.DEFAULT_VMEM_BUDGET
+    tags = {t for r in reports for t in r.tags}
+    results = {}
+    for r in reports:
+        results.setdefault(r.kernel, {})[r.case] = {
+            "grid": list(r.grid), "grid_points": r.grid_points,
+            "vmem_bytes": r.vmem_bytes,
+        }
+    payload = {
+        "config": {
+            "budget_bytes": budget,
+            "kernels": sorted({r.kernel for r in reports}),
+            "cases": len(reports),
+        },
+        "results": results,
+        "acceptance": {
+            "audit_clean": all(r.ok for r in reports),
+            "within_budget": all(r.vmem_bytes <= budget
+                                 for r in reports),
+            "covers_m_gt_4096": "m_gt_4096" in tags,
+            "covers_slack_gt_1": "slack_gt_1" in tags,
+        },
+    }
+    # lazy: benchmarks.common imports jax at module top, and the
+    # schema-checked writer is all we need from it
+    from benchmarks.common import write_bench_json
+    return write_bench_json("kernel_vmem", payload)
+
+
 def main(argv=None) -> int:
-    tag = argv[0] if argv else ""
-    rows = load(tag)
+    ap = argparse.ArgumentParser(
+        description="EXPERIMENTS.md roofline tables + audited kernel "
+                    "VMEM section")
+    ap.add_argument("tag", nargs="?", default="",
+                    help="dry-run tag filter (positional, legacy)")
+    ap.add_argument("--vmem", action="store_true",
+                    help="only print the audited kernel VMEM table "
+                         "(jax-free)")
+    ap.add_argument("--write-bench", action="store_true",
+                    help="write BENCH_kernel_vmem.json from the audit")
+    args = ap.parse_args(argv)
+
+    if args.write_bench:
+        path = write_vmem_bench()
+        print(f"wrote {path}")
+        return 0
+    if args.vmem:
+        vmem_section()
+        return 0
+
+    rows = load(args.tag)
     single = [r for r in rows if r["mesh"] == "16x16" and "roofline" in r]
     multi = [r for r in rows if r["mesh"] == "2x16x16"]
 
     print(f"## Roofline (single-pod 16x16, {len(single)} cells"
-          + (f", tag={tag})" if tag else ")"))
+          + (f", tag={args.tag})" if args.tag else ")"))
     print()
     print("| arch | shape | c (s) | m (s) | x (s) | dominant | "
           "MODEL_FLOPS | useful/HLO | roofline frac | mem/dev arg+tmp |")
@@ -63,6 +159,9 @@ def main(argv=None) -> int:
                   if "argument_bytes" in mem else "n/a")
         print(f"| {r['arch']} | {r['shape']} | {r['compile_s']:.0f} "
               f"| {memstr} |")
+
+    print()
+    vmem_section()
     return 0
 
 

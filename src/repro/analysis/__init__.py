@@ -4,23 +4,31 @@ Two layers keep the "sparse handling stays exact, hot loop stays
 compiled" property mechanical instead of per-test manual:
 
 * :mod:`repro.analysis.lint` — an AST linter with repo-specific rules
-  (ANL001..ANL005): module-level ``jax``/``jnp`` array construction in
+  (ANL001..ANL006): module-level ``jax``/``jnp`` array construction in
   importable modules, host-sync idioms inside jitted step factories and
   hot loops, Pallas ``pallas_call`` structural consistency, undeclared
-  ``custom_vjp`` static args, and visibly mismatched ``lax.scan``
-  carries. Run as ``python -m repro.analysis.lint src tests benchmarks
-  examples [--check]``.
+  ``custom_vjp`` static args, visibly mismatched ``lax.scan`` carries,
+  and ``pallas_call`` sites with no registered KernelSpec. Run as
+  ``python -m repro.analysis.lint src tests benchmarks examples
+  [--check]``.
 * :mod:`repro.analysis.contracts` — runtime contracts: ``trace_counter``
   (the one replacement for the monkeypatched ``make_plan`` counting
   idiom), ``assert_max_traces`` and ``no_retrace`` (a
   ``jax.log_compiles``-based recompile guard, surfaced as the opt-in
   ``debug_contracts=True`` hook on ``ServeSession`` / ``Engine`` /
   ``async_train``).
+* :mod:`repro.analysis.kernel_audit` — a grid/BlockSpec abstract
+  interpreter that proves bounds, output coverage, write-disjointness
+  and VMEM working-set budgets for every registered Pallas kernel over
+  a shape corpus, without compiling anything. Run as ``python -m
+  repro.analysis.kernel_audit [--check]``.
 """
 __all__ = [
     "ContractViolation", "RetraceError", "assert_max_traces",
     "no_retrace", "trace_counter", "Finding", "lint_file", "lint_paths",
-    "contracts", "lint",
+    "AuditFinding", "CaseReport", "GridCase", "KernelSpec", "Operand",
+    "audit_all", "load_registry", "register_kernel_spec", "vmem_table",
+    "contracts", "lint", "kernel_audit",
 ]
 
 _EXPORTS = {
@@ -28,17 +36,22 @@ _EXPORTS = {
     "assert_max_traces": "contracts", "no_retrace": "contracts",
     "trace_counter": "contracts",
     "Finding": "lint", "lint_file": "lint", "lint_paths": "lint",
+    "AuditFinding": "kernel_audit", "CaseReport": "kernel_audit",
+    "GridCase": "kernel_audit", "KernelSpec": "kernel_audit",
+    "Operand": "kernel_audit", "audit_all": "kernel_audit",
+    "load_registry": "kernel_audit",
+    "register_kernel_spec": "kernel_audit", "vmem_table": "kernel_audit",
 }
 
 
 def __getattr__(name):
-    # everything resolves lazily: the lint CLI (`python -m
-    # repro.analysis.lint`) must not pull in contracts' jax import (the
-    # CI analysis job runs without jax installed), and an eager lint
-    # import here would load the submodule twice under runpy (the
-    # "found in sys.modules" RuntimeWarning)
+    # everything resolves lazily: the lint and kernel-audit CLIs
+    # (`python -m repro.analysis.{lint,kernel_audit}`) must not pull in
+    # contracts' jax import (the CI analysis job runs without jax
+    # installed), and an eager import here would load the submodule
+    # twice under runpy (the "found in sys.modules" RuntimeWarning)
     import importlib
-    if name in ("contracts", "lint"):
+    if name in ("contracts", "lint", "kernel_audit"):
         return importlib.import_module(f"repro.analysis.{name}")
     mod = _EXPORTS.get(name)
     if mod is not None:

@@ -1,0 +1,432 @@
+"""Grid/BlockSpec auditor: prove the tiling invariants of every Pallas
+kernel by abstract interpretation — jax-free.
+
+The paper's dataflow claims (OSEL encoding, grouped-core workload
+allocation) are only correct if every tile of every operand is touched
+exactly where the schedule says: no block reads past an operand edge, no
+output tile is left unwritten, and no two grid points race on the same
+output tile unless that revisit *is* the declared accumulation. Bitwise
+tests pin those invariants for the handful of shapes they run; this
+module proves them for a whole shape corpus without compiling anything —
+Pallas index maps are pure functions of the grid indices, so the full
+grid can be enumerated concretely and every block placement checked with
+integer arithmetic.
+
+Kernels self-describe through a :class:`KernelSpec` registry: each
+kernel package ships an ``audit.py`` that mirrors its wrapper's tiling
+math (via the shared :mod:`repro.kernels.tiling` helpers — the same
+functions the wrappers call, so the model cannot drift) and registers
+one spec per ``pallas_call`` site. Lint rule ANL006 makes registration
+mandatory: a module containing a ``pallas_call`` with no KernelSpec in
+its package fails the analysis job.
+
+Per ``pallas_call`` and corpus case, four checks:
+
+bounds        every block origin (``index_map(grid point) * block_shape``,
+              Pallas Blocked indexing) plus the block shape stays inside
+              the operand, for every grid point, inputs and outputs.
+coverage      the union of output block placements covers every output
+              tile — no gaps a zero-initialized HBM buffer would silently
+              paper over.
+disjointness  two distinct grid points may write the same output tile
+              only if they differ exclusively in the declared
+              accumulation axes, AND their revisits are consecutive in
+              grid iteration order (row-major, last axis fastest) — a
+              non-consecutive revisit means Mosaic flushes the tile
+              mid-reduction and the result silently corrupts in
+              non-interpret mode. This is the race class the bitwise
+              interpret-mode tests can never see.
+vmem          the per-invocation working set (one block per operand +
+              scratch) against a configurable budget — the table the
+              roofline/bench artifacts cite instead of hand-maintained
+              docstring constants.
+
+Run::
+
+    PYTHONPATH=src python -m repro.analysis.kernel_audit [--check]
+        [--budget-mib 16] [--kernel SUBSTR] [--json PATH]
+
+``--check`` is the CI gate (exit 1 on any finding); it runs without jax
+installed, beside the lint pass in the analysis job.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import itertools
+import json
+import sys
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Operand", "GridCase", "KernelSpec", "AuditFinding", "CaseReport",
+    "register_kernel_spec", "get_registry", "load_registry",
+    "audit_case", "audit_all", "vmem_table", "DEFAULT_VMEM_BUDGET",
+    "main",
+]
+
+# Per-core VMEM on current TPU generations is 16 MiB (v4/v5e) to
+# 32 MiB (v5p); the audit gates on the conservative end so every kernel
+# schedules everywhere.
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024
+
+# The four kernel families. Each module registers its specs at import.
+AUDIT_MODULES = (
+    "repro.kernels.flash_attention.audit",
+    "repro.kernels.flgw_matmul.audit",
+    "repro.kernels.osel_encode.audit",
+    "repro.kernels.plan_encode.audit",
+)
+
+
+@dataclass(frozen=True)
+class Operand:
+    """One pallas_call operand (or result): array shape + BlockSpec."""
+    name: str
+    shape: Tuple[int, ...]
+    block: Tuple[int, ...]
+    index_map: Callable[..., Tuple[int, ...]]
+    itemsize: int = 4
+    role: str = "in"                      # "in" | "out"
+
+
+@dataclass(frozen=True)
+class GridCase:
+    """One concrete instantiation of a kernel's grid for a corpus case."""
+    label: str
+    grid: Tuple[int, ...]
+    operands: Tuple[Operand, ...]
+    # grid axes allowed to revisit an output tile (reduction axes whose
+    # revisits accumulate into VMEM scratch before one final flush)
+    accum_axes: frozenset = frozenset()
+    scratch_bytes: int = 0
+    tags: Tuple[str, ...] = ()            # corpus markers, e.g. "m_gt_4096"
+
+
+@dataclass(frozen=True)
+class KernelSpec:
+    """Self-description of one ``pallas_call`` site.
+
+    ``module`` is the dotted module that contains the pallas_call (ANL006
+    and the registry-completeness test match on it). ``build`` maps a
+    corpus-case param dict to the concrete :class:`GridCase`, mirroring
+    the wrapper's tiling math exactly.
+    """
+    name: str
+    module: str
+    build: Callable[[dict], GridCase]
+    corpus: Tuple[dict, ...]
+    note: str = ""
+
+
+@dataclass(frozen=True)
+class AuditFinding:
+    kernel: str
+    case: str
+    check: str                            # bounds|coverage|disjoint|vmem
+    message: str
+
+    def render(self) -> str:
+        return f"{self.kernel}[{self.case}] {self.check}: {self.message}"
+
+
+@dataclass
+class CaseReport:
+    kernel: str
+    case: str
+    grid: Tuple[int, ...]
+    grid_points: int
+    vmem_bytes: int
+    findings: List[AuditFinding] = field(default_factory=list)
+    tags: Tuple[str, ...] = ()
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+_REGISTRY: Dict[str, KernelSpec] = {}
+
+
+def register_kernel_spec(spec: KernelSpec) -> KernelSpec:
+    """Register (or re-register, e.g. on module reload) a KernelSpec."""
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_registry() -> Dict[str, KernelSpec]:
+    return dict(_REGISTRY)
+
+
+def load_registry() -> Dict[str, KernelSpec]:
+    """Import the audit modules of the four kernel families (jax-free)
+    and return the populated registry."""
+    for mod in AUDIT_MODULES:
+        importlib.import_module(mod)
+    return get_registry()
+
+
+# ---------------------------------------------------------------------------
+# the four checks
+# ---------------------------------------------------------------------------
+
+def _iter_grid(grid: Tuple[int, ...]) -> Iterable[Tuple[int, ...]]:
+    """Row-major grid enumeration — Pallas iteration order (last axis
+    fastest), which the disjointness contiguity check relies on."""
+    return itertools.product(*(range(n) for n in grid))
+
+
+def _prod(xs: Iterable[int]) -> int:
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _check_operand(kernel: str, case: GridCase, op: Operand,
+                   findings: List[AuditFinding]) -> None:
+    grid = case.grid
+    ndim = len(op.shape)
+    bounds_bad = 0
+    bounds_example = ""
+    # output bookkeeping: block-index tuple -> (first linear pos,
+    # last linear pos, projection of the first writer onto non-accum axes)
+    writers: Dict[Tuple[int, ...], Tuple[int, int, Tuple[int, ...]]] = {}
+    disjoint_bad = 0
+    disjoint_example = ""
+    contig_bad = 0
+    contig_example = ""
+    non_accum = [a for a in range(len(grid)) if a not in case.accum_axes]
+
+    for lin, gp in enumerate(_iter_grid(grid)):
+        idx = tuple(op.index_map(*gp))
+        if len(idx) != ndim or len(op.block) != ndim:
+            findings.append(AuditFinding(
+                kernel, case.label, "bounds",
+                f"{op.name}: index_map returns {len(idx)} block indices "
+                f"for a rank-{ndim} operand (block rank "
+                f"{len(op.block)})"))
+            return
+        origin = tuple(i * b for i, b in zip(idx, op.block))
+        if any(o < 0 for o in origin) or any(
+                o + b > s for o, b, s in zip(origin, op.block, op.shape)):
+            bounds_bad += 1
+            if not bounds_example:
+                bounds_example = (f"grid point {gp} places block "
+                                  f"{op.block} at origin {origin} in "
+                                  f"operand shape {op.shape}")
+        if op.role != "out":
+            continue
+        prev = writers.get(idx)
+        if prev is None:
+            writers[idx] = (lin, lin, tuple(gp[a] for a in non_accum))
+            continue
+        first, last, proj = prev
+        if tuple(gp[a] for a in non_accum) != proj:
+            disjoint_bad += 1
+            if not disjoint_example:
+                axes = [a for a in non_accum
+                        if gp[a] != _nth_grid_point(grid, first)[a]]
+                disjoint_example = (
+                    f"output tile {idx} written by grid points "
+                    f"{_nth_grid_point(grid, first)} and {gp}, which "
+                    f"differ in undeclared axes {axes} "
+                    f"(accum_axes={sorted(case.accum_axes)})")
+        elif lin != last + 1:
+            contig_bad += 1
+            if not contig_example:
+                contig_example = (
+                    f"output tile {idx} revisited at grid step {lin} "
+                    f"after last write at step {last} — revisits must "
+                    f"be consecutive in grid order or the accumulator "
+                    f"is flushed mid-reduction")
+        writers[idx] = (first, lin, proj)
+
+    if bounds_bad:
+        findings.append(AuditFinding(
+            kernel, case.label, "bounds",
+            f"{op.name}: {bounds_bad} grid point(s) out of bounds — "
+            f"{bounds_example}"))
+    if op.role == "out":
+        expected = _prod(_ceil_div(s, b)
+                         for s, b in zip(op.shape, op.block))
+        if len(writers) < expected:
+            missing = expected - len(writers)
+            gap = _first_gap(op, writers)
+            findings.append(AuditFinding(
+                kernel, case.label, "coverage",
+                f"{op.name}: {missing} of {expected} output tile(s) "
+                f"never written — first gap at block index {gap}"))
+        if disjoint_bad:
+            findings.append(AuditFinding(
+                kernel, case.label, "disjoint",
+                f"{op.name}: {disjoint_bad} undeclared overlapping "
+                f"write(s) — {disjoint_example}"))
+        if contig_bad:
+            findings.append(AuditFinding(
+                kernel, case.label, "disjoint",
+                f"{op.name}: {contig_bad} non-consecutive revisit(s) — "
+                f"{contig_example}"))
+
+
+def _nth_grid_point(grid: Tuple[int, ...], n: int) -> Tuple[int, ...]:
+    out = []
+    for size in reversed(grid):
+        out.append(n % size)
+        n //= size
+    return tuple(reversed(out))
+
+
+def _first_gap(op: Operand, writers: Dict) -> Optional[Tuple[int, ...]]:
+    tiles = itertools.product(*(range(_ceil_div(s, b))
+                                for s, b in zip(op.shape, op.block)))
+    for t in tiles:
+        if t not in writers:
+            return t
+    return None
+
+
+def case_vmem_bytes(case: GridCase) -> int:
+    """Per-invocation VMEM working set: one block per operand (in + out)
+    plus scratch. Pallas double-buffers pipelined blocks; the budget
+    headroom absorbs that (documented, deliberately not modelled — the
+    committed number is the schedule's irreducible footprint)."""
+    return sum(_prod(op.block) * op.itemsize
+               for op in case.operands) + case.scratch_bytes
+
+
+def audit_case(kernel: str, case: GridCase, *,
+               budget: int = DEFAULT_VMEM_BUDGET) -> CaseReport:
+    findings: List[AuditFinding] = []
+    for op in case.operands:
+        _check_operand(kernel, case, op, findings)
+    vmem = case_vmem_bytes(case)
+    if vmem > budget:
+        findings.append(AuditFinding(
+            kernel, case.label, "vmem",
+            f"working set {vmem} B ({vmem / 2**20:.2f} MiB) exceeds the "
+            f"{budget / 2**20:.1f} MiB budget"))
+    return CaseReport(kernel, case.label, case.grid,
+                      _prod(case.grid), vmem, findings, case.tags)
+
+
+def audit_all(*, budget: int = DEFAULT_VMEM_BUDGET,
+              kernel_filter: str = "") -> List[CaseReport]:
+    reports: List[CaseReport] = []
+    registry = load_registry()
+    for name in sorted(registry):
+        if kernel_filter and kernel_filter not in name:
+            continue
+        spec = registry[name]
+        for params in spec.corpus:
+            case = spec.build(dict(params))
+            reports.append(audit_case(name, case, budget=budget))
+    return reports
+
+
+def vmem_table(*, budget: int = DEFAULT_VMEM_BUDGET) -> Dict[str, Dict]:
+    """{kernel: {case: {vmem_bytes, grid, grid_points, ok}}} — the
+    machine-readable table the roofline/bench artifacts consume."""
+    table: Dict[str, Dict] = {}
+    for r in audit_all(budget=budget):
+        table.setdefault(r.kernel, {})[r.case] = {
+            "vmem_bytes": r.vmem_bytes,
+            "grid": list(r.grid),
+            "grid_points": r.grid_points,
+            "ok": r.ok,
+        }
+    return table
+
+
+def corpus_tags() -> set:
+    """Union of corpus tags across all registered cases (acceptance
+    checks assert 'm_gt_4096' and 'slack_gt_1' are present)."""
+    tags: set = set()
+    for r in audit_all():
+        tags.update(r.tags)
+    return tags
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _fmt_bytes(n: int) -> str:
+    if n >= 2**20:
+        return f"{n / 2**20:.2f}MiB"
+    return f"{n / 2**10:.1f}KiB"
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.kernel_audit",
+        description="Prove grid/BlockSpec invariants (bounds, coverage, "
+                    "write-disjointness, VMEM budget) for every "
+                    "registered Pallas kernel — no jax needed.")
+    ap.add_argument("--check", action="store_true",
+                    help="CI mode: terse table, exit 1 on any finding")
+    ap.add_argument("--budget-mib", type=float, default=None,
+                    help="VMEM working-set budget in MiB "
+                         f"(default {DEFAULT_VMEM_BUDGET / 2**20:.0f})")
+    ap.add_argument("--kernel", default="",
+                    help="only audit kernels whose name contains this")
+    ap.add_argument("--json", default=None,
+                    help="also dump the per-case table as JSON")
+    args = ap.parse_args(argv)
+
+    budget = (int(args.budget_mib * 2**20) if args.budget_mib
+              else DEFAULT_VMEM_BUDGET)
+    reports = audit_all(budget=budget, kernel_filter=args.kernel)
+    if not reports:
+        print("no KernelSpecs matched", file=sys.stderr)
+        return 1
+
+    width = max(len(r.kernel) for r in reports)
+    cwidth = max(len(r.case) for r in reports)
+    print(f"{'kernel':<{width}}  {'case':<{cwidth}}  "
+          f"{'grid':<18} {'points':>7}  {'vmem':>9}  checks")
+    for r in reports:
+        status = "ok" if r.ok else ",".join(
+            sorted({f.check for f in r.findings}))
+        print(f"{r.kernel:<{width}}  {r.case:<{cwidth}}  "
+              f"{str(r.grid):<18} {r.grid_points:>7}  "
+              f"{_fmt_bytes(r.vmem_bytes):>9}  {status}")
+    findings = [f for r in reports for f in r.findings]
+    tags = {t for r in reports for t in r.tags}
+    print(f"{len(reports)} case(s) across "
+          f"{len({r.kernel for r in reports})} kernel(s); corpus tags: "
+          f"{', '.join(sorted(tags)) or '-'}")
+
+    if args.json:
+        doc = {r.kernel: {} for r in reports}
+        for r in reports:
+            doc[r.kernel][r.case] = {
+                "grid": list(r.grid), "grid_points": r.grid_points,
+                "vmem_bytes": r.vmem_bytes, "ok": r.ok,
+                "findings": [f.render() for f in r.findings],
+            }
+        with open(args.json, "w", encoding="utf-8") as fh:
+            json.dump(doc, fh, indent=1)
+        print(f"wrote {args.json}")
+
+    if findings:
+        for f in findings:
+            print(f.render())
+        print(f"{len(findings)} finding(s)")
+        return 1
+    print("audit clean: bounds, coverage, disjointness and VMEM hold "
+          "for every registered kernel across the corpus")
+    return 0
+
+
+if __name__ == "__main__":
+    # Under ``python -m`` this module is ``__main__``; the audit modules
+    # register into the canonical ``repro.analysis.kernel_audit`` copy,
+    # so delegate there rather than audit an empty registry.
+    from repro.analysis.kernel_audit import main as _canonical_main
+    sys.exit(_canonical_main())

@@ -41,6 +41,13 @@ ANL005   ``lax.scan`` bodies whose carry structure visibly differs
          length vs init literal length), or that don't return a
          ``(carry, ys)`` pair — the runtime error is a deeply-nested
          pytree mismatch; the lint points at the body.
+ANL006   ``pl.pallas_call`` sites in modules with no
+         :class:`~repro.analysis.kernel_audit.KernelSpec` registration —
+         neither a ``register_kernel_spec`` call in the module itself
+         nor a sibling ``audit.py`` that registers specs naming this
+         module. Unregistered kernels escape the static grid/BlockSpec
+         audit (bounds / coverage / write-disjointness / VMEM), so
+         registration is mandatory.
 =======  ====================================================================
 
 Suppression: trailing ``# noqa: ANL003`` on the offending line (comma
@@ -48,7 +55,9 @@ lists and bare ``# noqa`` both work). Accepted findings live in the
 baseline file — one ``path|code|stripped source line`` entry per finding,
 ``#``-comments for justification — so ``--check`` stays green while the
 finding stays visible. ``--write-baseline`` emits the current findings in
-baseline format.
+baseline format. A baseline entry that no longer matches any finding is
+*stale* and fails ``--check`` — suppressions must rot away with the code
+they covered, not accumulate.
 """
 from __future__ import annotations
 
@@ -62,7 +71,8 @@ from dataclasses import dataclass
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 __all__ = ["RULES", "Finding", "lint_source", "lint_file", "lint_paths",
-           "load_baseline", "format_baseline_entry", "main"]
+           "load_baseline", "format_baseline_entry",
+           "stale_baseline_entries", "main"]
 
 RULES = {
     "ANL001": "module-level jax/jnp array construction in an importable "
@@ -72,6 +82,8 @@ RULES = {
     "ANL003": "pallas_call structural inconsistency",
     "ANL004": "custom_vjp static/nondiff declaration problem",
     "ANL005": "lax.scan carry structure mismatch",
+    "ANL006": "pallas_call site with no registered KernelSpec "
+              "(escapes the static kernel audit)",
 }
 
 # the positive lint fixtures deliberately violate the rules; keep the
@@ -235,8 +247,19 @@ class _FileLinter:
         self.anl003()
         self.anl004()
         self.anl005()
+        self.anl006()
         self.findings.sort(key=lambda f: (f.line, f.col, f.code))
         return self.findings
+
+    def _pallas_call_sites(self) -> List[ast.Call]:
+        sites = []
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                q = self.qual(node.func)
+                if q is not None and q.endswith("pallas_call") \
+                        and "pallas" in q:
+                    sites.append(node)
+        return sites
 
     # -- ANL001: import-time device-array construction ----------------------
 
@@ -453,13 +476,7 @@ class _FileLinter:
         return shape, imap
 
     def anl003(self) -> None:
-        for node in ast.walk(self.tree):
-            if not isinstance(node, ast.Call):
-                continue
-            q = self.qual(node.func)
-            if q is None or not q.endswith("pallas_call") \
-                    or "pallas" not in q:
-                continue
+        for node in self._pallas_call_sites():
             kw = {k.arg: k.value for k in node.keywords if k.arg}
             grid_n = _tuple_len(kw.get("grid")) if "grid" in kw else None
             specs: List[Tuple[ast.Call, str]] = []
@@ -720,6 +737,44 @@ class _FileLinter:
                 f"scan init is a {init_len}-element tuple but body "
                 f"`{name}` returns a {out_len}-element carry")
 
+    # -- ANL006: pallas_call with no registered KernelSpec ------------------
+
+    def _has_kernel_spec_registration(self) -> bool:
+        # registration in the module itself ...
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                q = self.qual(node.func)
+                if q is not None and q.endswith("register_kernel_spec"):
+                    return True
+        # ... or the shipped layout: a sibling audit.py that registers
+        # specs naming this module (only meaningful for real files)
+        if not os.path.exists(self.path):
+            return False
+        sibling = os.path.join(
+            os.path.dirname(os.path.abspath(self.path)), "audit.py")
+        stem = os.path.splitext(os.path.basename(self.path))[0]
+        if not os.path.exists(sibling):
+            return False
+        try:
+            with open(sibling, "r", encoding="utf-8") as fh:
+                sib_src = fh.read()
+        except OSError:
+            return False
+        return "register_kernel_spec" in sib_src and stem in sib_src
+
+    def anl006(self) -> None:
+        sites = self._pallas_call_sites()
+        if not sites or self._has_kernel_spec_registration():
+            return
+        for node in sites:
+            self.report(
+                node, "ANL006",
+                "pallas_call with no KernelSpec registered for this "
+                "module (no register_kernel_spec here or in a sibling "
+                "audit.py) — the kernel escapes the static grid/"
+                "BlockSpec audit; add a spec (see "
+                "repro.analysis.kernel_audit)")
+
 
 # ---------------------------------------------------------------------------
 # driver
@@ -821,11 +876,31 @@ def apply_baseline(findings: List[Finding],
     return new, old
 
 
+def stale_baseline_entries(findings: List[Finding], baseline: Counter,
+                           select: Optional[Iterable[str]] = None
+                           ) -> List[Tuple[str, str, str]]:
+    """Baseline entries (with multiplicity) that absorbed no finding —
+    the suppression has rotted and must be deleted. Under a narrowed
+    ``select``, entries for codes that were not run are not stale."""
+    budget = Counter(baseline)
+    for f in findings:
+        k = f.baseline_key()
+        if budget[k] > 0:
+            budget[k] -= 1
+    sel = {s.upper() for s in select} if select else None
+    stale: List[Tuple[str, str, str]] = []
+    for key, count in sorted(budget.items()):
+        if sel is not None and key[1] not in sel:
+            continue
+        stale.extend([key] * count)
+    return stale
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.lint",
         description="Repo-specific JAX/Pallas lint pass (rules "
-                    "ANL001..ANL005; see module docstring).")
+                    "ANL001..ANL006; see module docstring).")
     ap.add_argument("paths", nargs="+",
                     help="files or directory roots to lint")
     ap.add_argument("--check", action="store_true",
@@ -866,6 +941,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     baseline = (Counter() if args.no_baseline
                 else load_baseline(args.baseline))
     new, old = apply_baseline(findings, baseline)
+    stale = stale_baseline_entries(findings, baseline, select)
 
     if not args.check:
         for f in new:
@@ -875,12 +951,18 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     elif new:
         for f in new:
             print(f.render())
+    for path, code, src in stale:
+        print(f"{args.baseline}: stale entry matches no finding — "
+              f"delete it: {path}|{code}|{src}")
     counts = Counter(f.code for f in new)
     summary = ", ".join(f"{c}: {n}" for c, n in sorted(counts.items()))
-    if new:
-        print(f"{len(new)} finding(s) not in baseline"
-              + (f" ({summary})" if summary else "")
-              + (f"; {len(old)} baselined" if old else ""))
+    if new or (stale and args.check):
+        if new:
+            print(f"{len(new)} finding(s) not in baseline"
+                  + (f" ({summary})" if summary else "")
+                  + (f"; {len(old)} baselined" if old else ""))
+        if stale:
+            print(f"{len(stale)} stale baseline entrie(s)")
         return 1
     print(f"clean: 0 new finding(s)"
           + (f", {len(old)} baselined" if old else ""))

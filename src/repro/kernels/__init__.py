@@ -1,9 +1,13 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# NOTE: this module must stay importable WITHOUT jax — the static
+# kernel auditor (repro.analysis.kernel_audit) and the per-package
+# audit.py KernelSpec modules run in the jax-free CI analysis job, and
+# they import repro.kernels.tiling through this package. jax imports
+# live inside the functions that need them.
 import contextlib as _contextlib
-
-from jax.experimental.pallas import tpu as _pltpu
 
 # Shared reference-impl mode for every Pallas kernel in this package:
 # under plain jit, GSPMD cannot partition a pallas custom call — it
@@ -35,6 +39,7 @@ def tpu_compiler_params(**kwargs):
     ``TPUCompilerParams``. All kernels route through this helper so they run
     on either.
     """
+    from jax.experimental.pallas import tpu as _pltpu
     cls = getattr(_pltpu, "CompilerParams", None) \
         or getattr(_pltpu, "TPUCompilerParams")
     return cls(**kwargs)

@@ -251,6 +251,12 @@ def flash_bwd(q, k, v, out, lse, do, *, causal=True, window=0, softcap=0.0,
     scale = float(d ** -0.5) if scale is None else float(scale)
     bq = min(bq, s)
     bk = min(bk, t)
+    # Same contract as flash_fwd. Without it, a caller passing a
+    # non-dividing block silently drops the sequence tail: the grid is
+    # floor(s/bq) × floor(t/bk), so dq/dk/dv tail tiles stay zero —
+    # the coverage-gap class the static auditor
+    # (repro.analysis.kernel_audit) checks for.
+    assert s % bq == 0 and t % bk == 0, (s, bq, t, bk)
     nq, nk = s // bq, t // bk
 
     delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32),

@@ -14,22 +14,14 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention.flash_attention import (flash_bwd,
                                                            flash_fwd)
 from repro.kernels.flash_attention import ref as _ref
+# Block selection is shared with the static auditor
+# (repro.kernels.flash_attention.audit) so the audited grid is, by
+# construction, the grid this wrapper builds.
+from repro.kernels.tiling import pick_block as _pick_block
 
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
-
-
-def _pick_block(n: int, pref: int) -> int:
-    if n <= pref:
-        return n
-    for c in range(pref, 127, -128):
-        if n % c == 0:
-            return c
-    for c in range(pref, 0, -1):
-        if n % c == 0:
-            return c
-    return n
 
 
 @functools.partial(jax.custom_vjp,

@@ -62,8 +62,9 @@ def grouped_bmm(xg: jax.Array, wc: jax.Array, *, bb: int = 128,
 
     Dims must be multiples of the tile sizes (ops.py pads). Tile sizes default
     to 128 to align the MXU systolic array; the f32 accumulator tile is
-    (bb, bn) in VMEM scratch. VMEM working set per step:
-    bb*bk + bk*bn + 2*bb*bn floats ≈ 192 KiB at 128³/f32 — well under 16 MiB.
+    (bb, bn) in VMEM scratch. The per-step VMEM working set is audited
+    statically over a shape corpus — see ``audit.py`` beside this module
+    and ``python -m repro.analysis.kernel_audit`` for the numbers.
     """
     g, b, m = xg.shape
     g2, m2, n = wc.shape
@@ -121,11 +122,12 @@ def fused_bmm(x: jax.Array, wc: jax.Array, row_ids: jax.Array, *,
 
     ``x``'s last column must be zero (the invalid-slot sink: every padding
     or invalid ``row_ids`` entry must equal ``M``). ``B``/``capM``/``capN``
-    must be multiples of the tile sizes (ops.py pads). VMEM working set
-    per step: the (bb, M+1) activation block — the whole contracted width
-    rides VMEM so the per-tile gather stays local — plus the usual
-    (bk, bn) weight tile and (bb, bn) f32 accumulator; at decode batch
-    sizes that is dominated by bb·M floats (~4 MiB at bb=128, M=8192).
+    must be multiples of the tile sizes (ops.py pads). The per-step VMEM
+    working set is dominated by the (bb, M+1) activation block — the
+    whole contracted width rides VMEM so the per-tile gather stays
+    local; it is audited statically over a shape corpus, including the
+    M > 4096 decode cases — see ``audit.py`` beside this module and
+    ``python -m repro.analysis.kernel_audit`` for the numbers.
     """
     b, m1 = x.shape
     g, cap_m, n = wc.shape

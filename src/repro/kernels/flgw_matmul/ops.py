@@ -36,21 +36,15 @@ from repro.kernels.flgw_matmul import ref as _ref
 # any einsum. The switch now lives in ``repro.kernels`` (shared with the
 # plan_encode kernel); these aliases keep existing callers working.
 from repro.kernels import _REF_MODE, use_reference_impl  # noqa: F401
-
-
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
+# Tile arithmetic is shared with the static auditor
+# (repro.kernels.flgw_matmul.audit) so the audited grid is, by
+# construction, the grid this wrapper builds.
+from repro.kernels.tiling import pick_tile as _pick_tile
+from repro.kernels.tiling import round_up as _round_up
 
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
-
-
-def _pick_tile(dim: int, pref: int) -> int:
-    """Largest tile ≤ pref that keeps padding small; multiples of 8."""
-    if dim >= pref:
-        return pref
-    return max(8, _round_up(dim, 8))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "impl"))

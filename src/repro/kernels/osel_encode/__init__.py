@@ -1,2 +1,18 @@
-from repro.kernels.osel_encode.ops import osel_mask, reference_mask  # noqa: F401
-from repro.kernels.osel_encode.osel_encode import encode_mask  # noqa: F401
+# Lazy re-exports (PEP 562): importing the package must not pull in jax,
+# so the jax-free audit module (audit.py / repro.analysis.kernel_audit)
+# can load its KernelSpecs in the no-jax CI analysis job.
+_EXPORTS = {
+    "osel_mask": "ops", "reference_mask": "ops",
+    "encode_mask": "osel_encode",
+}
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    import importlib
+    mod = _EXPORTS.get(name)
+    if mod is not None:
+        return getattr(
+            importlib.import_module(f"{__name__}.{mod}"), name)
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

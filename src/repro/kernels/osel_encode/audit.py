@@ -1,0 +1,47 @@
+"""KernelSpec for the OSEL mask-encode kernel (jax-free).
+
+The comparator-array encode is the simplest schedule in the repo — a 2-D
+``(m-tile, n-tile)`` grid where every output tile is written exactly
+once (no accumulation axes at all), which makes it the auditor's
+disjointness base case: any revisit is a bug.
+"""
+from __future__ import annotations
+
+from repro.analysis.kernel_audit import (GridCase, KernelSpec, Operand,
+                                         register_kernel_spec)
+from repro.kernels.tiling import round_up
+
+INT32 = 4
+UINT8 = 1
+
+
+def _case(p: dict) -> GridCase:
+    m, n = p["m"], p["n"]
+    bm = min(p.get("bm", 256), m)
+    bn = min(p.get("bn", 256), n)
+    mp = round_up(m, bm)
+    np_ = round_up(n, bn)
+    return GridCase(
+        label=f"m{m}_n{n}", grid=(mp // bm, np_ // bn),
+        operands=(
+            Operand("ig", (mp, 1), (bm, 1), lambda i, j: (i, 0), INT32),
+            Operand("og", (1, np_), (1, bn), lambda i, j: (0, j), INT32),
+            Operand("mask", (mp, np_), (bm, bn), lambda i, j: (i, j),
+                    UINT8, role="out"),
+        ),
+        tags=("m_gt_4096",) if m > 4096 else (),
+    )
+
+
+register_kernel_spec(KernelSpec(
+    name="osel_encode.encode_mask",
+    module="repro.kernels.osel_encode.osel_encode",
+    build=_case,
+    corpus=(
+        {"m": 48, "n": 64},
+        {"m": 300, "n": 200},            # non-divisible, pads
+        {"m": 1024, "n": 512},
+        {"m": 4352, "n": 4352},          # crosses the old 4096 mark
+    ),
+    note="pure VPU outer-equality; zero accumulation axes",
+))

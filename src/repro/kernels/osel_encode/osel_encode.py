@@ -19,6 +19,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import tpu_compiler_params
+# Shared with repro.kernels.osel_encode.audit so the audited grid is, by
+# construction, the grid this wrapper builds.
+from repro.kernels.tiling import round_up
 
 
 def _encode_kernel(ig_ref, og_ref, mask_ref):
@@ -34,8 +37,8 @@ def encode_mask(ig_idx: jax.Array, og_idx: jax.Array, *, bm: int = 256,
     m, n = ig_idx.shape[0], og_idx.shape[0]
     bm = min(bm, m)
     bn = min(bn, n)
-    mp = (m + bm - 1) // bm * bm
-    np_ = (n + bn - 1) // bn * bn
+    mp = round_up(m, bm)
+    np_ = round_up(n, bn)
     ig2 = jnp.pad(ig_idx.astype(jnp.int32), (0, mp - m),
                   constant_values=-1)[:, None]
     og2 = jnp.pad(og_idx.astype(jnp.int32), (0, np_ - n),

@@ -25,12 +25,13 @@ import jax.numpy as jnp
 from repro.kernels import reference_impl_active
 from repro.kernels.plan_encode import ref as _ref
 from repro.kernels.plan_encode.plan_encode import assign_slots
-
-# Default placement tile (items per comparator-tile side). 512 keeps the
-# (bi, bj) int32/f32 rank-pass tiles ~1 MiB each — far under VMEM at any
-# M. Override per call (``balanced_assign(block=...)``) to force the
-# multi-tile path on small inputs in tests.
-_DEFAULT_BLOCK = 512
+# Placement-tile selection is shared with the static auditor
+# (repro.kernels.plan_encode.audit) so the audited grid is, by
+# construction, the grid this wrapper builds. Override per call
+# (``balanced_assign(block=...)``) to force the multi-tile path on small
+# inputs in tests.
+from repro.kernels.tiling import plan_block as _plan_block
+from repro.kernels.tiling import round_up as _round_up
 
 
 def resolve_impl(items: int, impl: str | None = None) -> str:
@@ -60,10 +61,6 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
-
-
 @functools.partial(jax.jit, static_argnames=("axis", "slack", "interpret",
                                              "impl", "block"))
 def _balanced_assign(scores: jax.Array, axis: int, slack: float,
@@ -91,7 +88,7 @@ def _balanced_assign(scores: jax.Array, axis: int, slack: float,
     length = flat.shape[0]
     pref = jnp.argmax(flat, axis=-1).astype(jnp.int32)       # (L, M)
     strength = jnp.max(flat, axis=-1).astype(jnp.float32)
-    b = block if block else min(_DEFAULT_BLOCK, _round_up(m, 128))
+    b = _plan_block(m, block)
     mp = _round_up(m, b)
     # Padding items: sentinel group g, -inf strength — never counted, never
     # placed (their garbage slots are sliced off below).

@@ -1,0 +1,60 @@
+"""Shared tile-size arithmetic for the Pallas kernels — jax-free.
+
+Every kernel wrapper derives its grid and BlockSpec shapes from the same
+handful of integer helpers. They live here, outside any jax import, so
+the static kernel auditor (:mod:`repro.analysis.kernel_audit`) and the
+per-package ``audit.py`` KernelSpec modules can re-derive the *exact*
+grids the wrappers build without pulling in jax — the CI analysis job
+runs without jax installed. Keeping one copy also removes the
+drift hazard of the auditor modelling different tiling math than the
+kernels execute: both sides call these functions.
+"""
+from __future__ import annotations
+
+# Default plan_encode placement tile (items per comparator-tile side).
+# 512 keeps the (bi, bj) int32/f32 rank-pass tiles ~1 MiB each — far
+# under VMEM at any M.
+DEFAULT_PLAN_BLOCK = 512
+
+
+def round_up(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``x``."""
+    return (x + m - 1) // m * m
+
+
+def pick_tile(dim: int, pref: int) -> int:
+    """flgw_matmul tile rule: largest tile <= pref that keeps padding
+    small; multiples of 8 (sublane quantum)."""
+    if dim >= pref:
+        return pref
+    return max(8, round_up(dim, 8))
+
+
+def pick_block(n: int, pref: int) -> int:
+    """flash_attention block rule: the largest divisor of ``n`` that is
+    <= ``pref``, preferring multiples of 128 (MXU/lane alignment)."""
+    if n <= pref:
+        return n
+    for c in range(pref, 127, -128):
+        if n % c == 0:
+            return c
+    for c in range(pref, 0, -1):
+        if n % c == 0:
+            return c
+    return n
+
+
+def plan_block(m: int, block: int | None = None) -> int:
+    """plan_encode placement tile rule (``ops._balanced_assign``)."""
+    return block if block else min(DEFAULT_PLAN_BLOCK, round_up(m, 128))
+
+
+def compute_cap(m: int, g: int, slack: float = 1.0) -> int:
+    """Static per-group capacity: ``ceil(m/g)``, stretched by ``slack``.
+
+    Integer mirror of :func:`repro.kernels.plan_encode.ref.compute_cap`
+    (which lives beside jax imports); the reference implementation
+    asserts parity in tests.
+    """
+    cap = max(1, -(-m // g))
+    return min(m, int(-(-cap * slack // 1))) if slack > 1.0 else cap

@@ -14,7 +14,7 @@ def _kernel(x_ref, o_ref):
 
 def arity_mismatch(x):
     # ANL003: in_specs index_map takes 1 grid index, grid has 2 dims
-    return pl.pallas_call(
+    return pl.pallas_call(  # noqa: ANL006
         _kernel,
         grid=(2, 2),
         in_specs=[pl.BlockSpec((BM, BN), lambda i: (i, 0))],
@@ -25,7 +25,7 @@ def arity_mismatch(x):
 
 def rank_mismatch(x):
     # ANL003: out_specs block shape is rank 2, out_shape is rank 1
-    return pl.pallas_call(
+    return pl.pallas_call(  # noqa: ANL006
         _kernel,
         grid=(2,),
         in_specs=[pl.BlockSpec((BM, BN), lambda i: (i, 0))],
@@ -36,7 +36,7 @@ def rank_mismatch(x):
 
 def operand_mismatch(x, y):
     # ANL003: 1 in_spec but the call is applied to 2 operands
-    return pl.pallas_call(
+    return pl.pallas_call(  # noqa: ANL006
         _kernel,
         grid=(1,),
         in_specs=[pl.BlockSpec((BM, BN), lambda i: (i, 0))],
@@ -47,7 +47,7 @@ def operand_mismatch(x, y):
 
 def scratch_mismatch(x):
     # ANL003: scratch dim 32 is not drawn from any block shape
-    return pl.pallas_call(
+    return pl.pallas_call(  # noqa: ANL006
         _kernel,
         grid=(1,),
         in_specs=[pl.BlockSpec((BM, BN), lambda i: (i, 0))],
@@ -59,7 +59,7 @@ def scratch_mismatch(x):
 
 def traced_interpret(x, flag):
     # ANL003: interpret= is a computed value, not a Python bool
-    return pl.pallas_call(
+    return pl.pallas_call(  # noqa: ANL006
         _kernel,
         grid=(1,),
         in_specs=[pl.BlockSpec((BM, BN), lambda i: (i, 0))],

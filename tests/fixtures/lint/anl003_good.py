@@ -16,7 +16,7 @@ def _kernel(x_ref, o_ref, acc_ref, flag_ref):
 
 
 def consistent(x, qpk=2):
-    return pl.pallas_call(
+    return pl.pallas_call(  # noqa: ANL006
         _kernel,
         grid=(2, 2),
         in_specs=[pl.BlockSpec((BM, BN),

@@ -1,0 +1,36 @@
+"""Positive fixture: pallas_call sites with no KernelSpec registered
+(ANL006). Both calls are structurally consistent so only ANL006 fires;
+there is no register_kernel_spec here and no sibling audit.py naming
+this module."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 8
+BN = 16
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def unaudited_one(x):
+    # ANL006: no KernelSpec registration anywhere for this module
+    return pl.pallas_call(
+        _kernel,
+        grid=(2, 2),
+        in_specs=[pl.BlockSpec((BM, BN), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((BM * 2, BN * 2), jnp.float32),
+    )(x)
+
+
+def unaudited_two(x):
+    # ANL006: second unregistered site — one finding per call
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((BM, BN), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BM, BN), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BM, BN), jnp.float32),
+    )(x)

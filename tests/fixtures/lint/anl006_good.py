@@ -1,0 +1,41 @@
+"""Negative fixture: a pallas_call module that registers its own
+KernelSpec in the same file lints clean under ANL006."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.analysis.kernel_audit import (GridCase, KernelSpec, Operand,
+                                         register_kernel_spec)
+
+BM = 8
+BN = 16
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def audited(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(2, 2),
+        in_specs=[pl.BlockSpec((BM, BN), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((BM * 2, BN * 2), jnp.float32),
+    )(x)
+
+
+def _case(p):
+    return GridCase(
+        label="fixture", grid=(2, 2),
+        operands=(
+            Operand("x", (BM * 2, BN * 2), (BM, BN),
+                    lambda i, j: (i, j)),
+            Operand("o", (BM * 2, BN * 2), (BM, BN),
+                    lambda i, j: (i, j), role="out"),
+        ),
+    )
+
+
+register_kernel_spec(KernelSpec(
+    name="fixture.audited", module=__name__, build=_case, corpus=({},)))

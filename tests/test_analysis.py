@@ -2,9 +2,10 @@
 
 Two layers under test:
 
-* the AST linter — every rule ANL001..ANL005 against its positive and
+* the AST linter — every rule ANL001..ANL006 against its positive and
   negative fixture (``tests/fixtures/lint/``), plus the suppression
-  machinery (per-line ``# noqa``, the committed baseline, CLI exits);
+  machinery (per-line ``# noqa``, the committed baseline including
+  stale-entry rot detection, CLI exits);
 * the runtime contracts — ``trace_counter`` parity with the retired
   per-file counting monkeypatch, ``assert_max_traces``, and
   ``no_retrace`` catching a deliberately shape-unstable jit loop.
@@ -20,14 +21,15 @@ from repro.analysis import contracts
 from repro.analysis.lint import (DEFAULT_EXCLUDES, Finding,
                                  apply_baseline, format_baseline_entry,
                                  lint_file, lint_paths, lint_source,
-                                 load_baseline, main)
+                                 load_baseline, main,
+                                 stale_baseline_entries)
 
 FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures", "lint")
 
 # rule -> findings its positive fixture must produce (count pins the
 # fixture corpus: every deliberate violation is caught, nothing extra)
 EXPECTED = {"ANL001": 4, "ANL002": 5, "ANL003": 5, "ANL004": 4,
-            "ANL005": 3}
+            "ANL005": 3, "ANL006": 2}
 
 
 def _fixture(rule: str, kind: str) -> str:
@@ -99,6 +101,45 @@ def test_baseline_roundtrip(tmp_path):
     extra = Finding("x.py", 1, 0, "ANL005", "m", "src-line")
     new, _ = apply_baseline(findings + [extra], loaded)
     assert new == [extra]
+
+
+def test_stale_baseline_entries_detects_rot():
+    findings = lint_file(_fixture("ANL005", "bad"))
+    loaded = load_baseline(os.devnull)
+    for f in findings:
+        loaded[f.baseline_key()] += 1
+    assert stale_baseline_entries(findings, loaded) == []
+    ghost = ("gone.py", "ANL005", "x = removed_code()")
+    loaded[ghost] += 1
+    assert stale_baseline_entries(findings, loaded) == [ghost]
+    # a narrowed --select that never ran the entry's rule is not rot
+    assert stale_baseline_entries(findings, loaded,
+                                  select=["ANL001"]) == []
+
+
+def test_stale_baseline_entry_fails_check(tmp_path, capsys):
+    bad = _fixture("ANL001", "bad")
+    bl = tmp_path / "bl.txt"
+    assert main([bad, "--write-baseline", "--baseline", str(bl),
+                 "--no-default-excludes"]) == 0
+    assert main([bad, "--check", "--baseline", str(bl),
+                 "--no-default-excludes"]) == 0
+    # an entry matching no finding turns --check red until deleted
+    with open(bl, "a", encoding="utf-8") as fh:
+        fh.write("gone.py|ANL001|X = jnp.zeros((2,))\n")
+    assert main([bad, "--check", "--baseline", str(bl),
+                 "--no-default-excludes"]) == 1
+    assert "stale" in capsys.readouterr().out
+
+
+def test_anl006_requires_registration_in_file_or_sibling_audit():
+    # the shipped kernels register via sibling audit.py modules: the
+    # whole src tree must be ANL006-clean
+    src_root = os.path.join(os.path.dirname(__file__), "..", "src")
+    assert lint_paths([src_root], select=["ANL006"]) == []
+    # a pallas_call module with no registration anywhere fires per site
+    findings = lint_file(_fixture("ANL006", "bad"))
+    assert [f.code for f in findings] == ["ANL006", "ANL006"]
 
 
 def test_cli_exit_codes(tmp_path, capsys):

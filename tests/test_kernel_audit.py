@@ -1,0 +1,242 @@
+"""The static grid/BlockSpec auditor (``repro.analysis.kernel_audit``).
+
+Three layers under test:
+
+* the checker itself — deliberately broken :class:`GridCase` fixtures,
+  one per check class (out-of-bounds origin, output coverage gap,
+  undeclared overlapping writes, non-consecutive accumulation revisit,
+  VMEM blowout), each pinned to fire exactly its finding;
+* the shipped registry — every ``pallas_call`` module in ``src`` has a
+  registered :class:`KernelSpec` naming it, the whole corpus audits
+  clean at the default budget, and the corpus genuinely covers the
+  M > 4096 and slack > 1 geometries the PR-7 cap-lift introduced;
+* the toolchain contract — the registry loads without importing jax
+  (the CI analysis job runs jax-free) and the CLI exit codes gate.
+
+No jax import in this file: the auditor must stay importable and
+correct with nothing but the standard library.
+"""
+import ast
+import os
+import subprocess
+import sys
+
+from repro.analysis.kernel_audit import (AUDIT_MODULES,
+                                         DEFAULT_VMEM_BUDGET, GridCase,
+                                         Operand, audit_all, audit_case,
+                                         case_vmem_bytes, corpus_tags,
+                                         load_registry, main, vmem_table)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def _codes(report):
+    return sorted({f.check for f in report.findings})
+
+
+# -- broken fixtures: each check class fires ---------------------------------
+
+def test_out_of_bounds_origin_fires_bounds():
+    # grid point 1 places the (8, 8) block at origin (8, 0) in an
+    # (8, 8) operand — one bounds finding, nothing else
+    case = GridCase(
+        label="oob", grid=(2,),
+        operands=(
+            Operand("x", (8, 8), (8, 8), lambda i: (i, 0)),
+        ))
+    rep = audit_case("fixture", case)
+    assert _codes(rep) == ["bounds"]
+    assert len(rep.findings) == 1
+    assert "origin (8, 0)" in rep.findings[0].message
+
+
+def test_index_map_rank_mismatch_fires_bounds():
+    case = GridCase(
+        label="rank", grid=(2,),
+        operands=(
+            Operand("x", (16, 8), (8, 8), lambda i: (i,)),
+        ))
+    rep = audit_case("fixture", case)
+    assert _codes(rep) == ["bounds"]
+    assert "block indices" in rep.findings[0].message
+
+
+def test_coverage_gap_fires_coverage():
+    # 4 output tiles, the grid only ever writes column 0 — 2 never
+    # written. The flash_bwd non-dividing-block failure shape.
+    case = GridCase(
+        label="gap", grid=(2,),
+        operands=(
+            Operand("y", (16, 16), (8, 8), lambda i: (i, 0),
+                    role="out"),
+        ))
+    rep = audit_case("fixture", case)
+    assert _codes(rep) == ["coverage"]
+    assert len(rep.findings) == 1
+    assert "2 of 4" in rep.findings[0].message
+
+
+def test_undeclared_overlapping_writes_fire_disjoint():
+    # grid (2, 2) collapses axis 1 onto the same output tile with no
+    # accum declaration — a write race
+    case = GridCase(
+        label="race", grid=(2, 2),
+        operands=(
+            Operand("y", (16, 8), (8, 8), lambda i, j: (i, 0),
+                    role="out"),
+        ))
+    rep = audit_case("fixture", case)
+    assert _codes(rep) == ["disjoint"]
+    assert "undeclared" in rep.findings[0].message
+    # declaring the axis as accumulation makes the same case legal:
+    # revisits are consecutive (axis 1 is innermost)
+    fixed = GridCase(
+        label="accum", grid=(2, 2),
+        operands=case.operands, accum_axes=frozenset({1}))
+    assert audit_case("fixture", fixed).ok
+
+
+def test_non_consecutive_revisit_fires_disjoint():
+    # axis 0 is declared accumulation, but it is the OUTER axis: tile
+    # (0, 0) is revisited at grid steps 0 and 2 with step 1 in between
+    # — Mosaic would flush the accumulator mid-reduction
+    case = GridCase(
+        label="flush", grid=(2, 2),
+        operands=(
+            Operand("y", (16, 8), (8, 8), lambda i, j: (j, 0),
+                    role="out"),
+        ),
+        accum_axes=frozenset({0}))
+    rep = audit_case("fixture", case)
+    assert _codes(rep) == ["disjoint"]
+    assert "non-consecutive" in rep.findings[0].message
+
+
+def test_vmem_blowout_fires_vmem():
+    # one (4096, 4096) f32 block = 64 MiB > the 16 MiB default budget
+    case = GridCase(
+        label="blowout", grid=(1,),
+        operands=(
+            Operand("x", (4096, 4096), (4096, 4096),
+                    lambda i: (0, 0)),
+        ))
+    assert case_vmem_bytes(case) == 4096 * 4096 * 4
+    rep = audit_case("fixture", case)
+    assert _codes(rep) == ["vmem"]
+    # a budget that fits turns it green
+    assert audit_case("fixture", case, budget=128 * 2**20).ok
+
+
+def test_scratch_counts_toward_vmem():
+    lean = GridCase(label="s", grid=(1,),
+                    operands=(Operand("x", (8, 8), (8, 8),
+                                      lambda i: (0, 0)),))
+    fat = GridCase(label="s", grid=(1,), operands=lean.operands,
+                   scratch_bytes=1024)
+    assert case_vmem_bytes(fat) == case_vmem_bytes(lean) + 1024
+
+
+# -- the shipped registry audits clean ---------------------------------------
+
+def test_repo_audits_clean_at_default_budget():
+    reports = audit_all()
+    bad = [f.render() for r in reports for f in r.findings]
+    assert bad == [], bad
+    # every report fits the conservative 16 MiB budget with headroom
+    assert all(r.vmem_bytes <= DEFAULT_VMEM_BUDGET for r in reports)
+
+
+def test_corpus_covers_cap_lift_geometries():
+    tags = corpus_tags()
+    assert "m_gt_4096" in tags       # PR-7 lifted the 4096-item cap
+    assert "slack_gt_1" in tags      # capacity-stretch grouping
+    # M > 4096 is proven for every kernel family, not just one
+    by_family = {}
+    for r in audit_all():
+        fam = r.kernel.split(".")[0]
+        by_family.setdefault(fam, set()).update(r.tags)
+    assert set(by_family) == {"flash_attention", "flgw_matmul",
+                              "osel_encode", "plan_encode"}
+    for fam, tags in by_family.items():
+        assert "m_gt_4096" in tags, fam
+
+
+def test_every_pallas_call_module_has_a_registered_spec():
+    """The ANL006 invariant, enforced structurally: each src module
+    containing a pallas_call appears as some KernelSpec's ``module``."""
+    registered = {spec.module for spec in load_registry().values()}
+    pallas_modules = set()
+    for dirpath, _, filenames in os.walk(os.path.join(SRC, "repro")):
+        for fn in filenames:
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            with open(path, "r", encoding="utf-8") as fh:
+                src = fh.read()
+            if "pallas_call" not in src:
+                continue
+            tree = ast.parse(src)
+            calls = [n for n in ast.walk(tree)
+                     if isinstance(n, ast.Call)
+                     and isinstance(n.func, ast.Attribute)
+                     and n.func.attr == "pallas_call"]
+            if calls:
+                rel = os.path.relpath(path, SRC)
+                pallas_modules.add(
+                    rel[:-3].replace(os.sep, "."))
+    assert pallas_modules, "no pallas_call modules found under src"
+    missing = pallas_modules - registered
+    assert missing == set(), missing
+
+
+def test_vmem_table_shape():
+    table = vmem_table()
+    assert set(table) == {k for k in load_registry()}
+    for kernel, cases in table.items():
+        for case, row in cases.items():
+            assert row["ok"] is True
+            assert row["vmem_bytes"] > 0
+            assert row["grid_points"] >= 1
+
+
+# -- toolchain contract: jax-free, CLI gates ---------------------------------
+
+def test_registry_loads_without_jax():
+    """The CI analysis job has no jax; loading every KernelSpec and
+    auditing the corpus must never import it."""
+    code = (
+        "import sys\n"
+        "from repro.analysis.kernel_audit import audit_all\n"
+        "reports = audit_all()\n"
+        "assert reports and all(r.ok for r in reports)\n"
+        "assert 'jax' not in sys.modules, 'jax leaked into the audit'\n"
+    )
+    env = dict(os.environ, PYTHONPATH=SRC)
+    subprocess.run([sys.executable, "-c", code], check=True, env=env,
+                   cwd=REPO)
+
+
+def test_audit_modules_list_is_complete():
+    assert len(AUDIT_MODULES) == 4
+    assert {m.split(".")[2] for m in AUDIT_MODULES} == {
+        "flash_attention", "flgw_matmul", "osel_encode", "plan_encode"}
+
+
+def test_cli_check_exit_codes(capsys):
+    assert main(["--check"]) == 0
+    # a starvation budget turns every case red
+    assert main(["--check", "--budget-mib", "0.001"]) == 1
+    # an unknown kernel filter is an error, not a silent green
+    assert main(["--kernel", "no_such_kernel"]) == 1
+    out = capsys.readouterr()
+    assert "audit clean" in out.out
+
+
+def test_cli_json_dump(tmp_path, capsys):
+    import json
+    dest = tmp_path / "audit.json"
+    assert main(["--json", str(dest)]) == 0
+    doc = json.loads(dest.read_text())
+    assert "flgw_matmul.grouped_bmm" in doc
+    capsys.readouterr()
